@@ -1,0 +1,101 @@
+"""Paper Fig. 10: ablations of the three §3.5 engine optimizations.
+
+  - lazy batching : ``execute_lazy`` (one flat parameter-grad VJP) vs
+                    grad-through-scan;
+  - streaming     : eager-prefix hoisting on vs off (the W·x projection
+                    inside vs outside the sequential region);
+  - fusion        : kernel-launch census of the fused cell vs the
+                    per-op dataflow (the structural evidence; on TPU the
+                    pallas cell fuses ~10 elementwise launches into 1 —
+                    wall-clock shown in interpret mode is meaningless on
+                    CPU, so we report launch counts like the paper
+                    reports kernel counts).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.fusion import count_hlo_kernels
+from repro.core.scheduler import execute, execute_lazy, readout_roots
+from repro.core.structure import pack_batch, pack_external
+
+
+def setup(model: str, bs: int, hidden: int, rng):
+    m = get_paper_model(model)
+    fn = m.make_vertex(hidden=hidden, input_dim=64)
+    graphs = m.make_graphs(bs, rng=rng) if model != "fixed_lstm" \
+        else m.make_graphs(bs, steps=32)
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch(graphs, pad_arity=max(fn.arity, 1))
+    inputs = [rng.standard_normal((g.num_nodes, 64)).astype(np.float32)
+              for g in graphs]
+    ext = jnp.asarray(pack_external(inputs, sched, 64))
+    return fn, params, sched.to_device(), ext
+
+
+def bench(col: Collector, models, bs: int = 32, hidden: int = 64):
+    rng = np.random.default_rng(0)
+    for model in models:
+        fn, params, dev, ext = setup(model, bs, hidden, rng)
+
+        # ---- lazy batching ---------------------------------------------
+        def loss_scan(p, e):
+            r = execute(fn, p, dev, e)
+            return jnp.sum(readout_roots(r.buf, dev) ** 2)
+
+        def loss_lazy(p, e):
+            return jnp.sum(readout_roots(execute_lazy(fn, p, e, dev),
+                                         dev) ** 2)
+
+        g_scan = jax.jit(jax.grad(loss_scan))
+        g_lazy = jax.jit(jax.grad(loss_lazy))
+        t_scan = time_fn(lambda: g_scan(params, ext))
+        t_lazy = time_fn(lambda: g_lazy(params, ext))
+        col.add(f"ablation/{model}/bwd_scan", t_scan * 1e3, "ms",
+                f"bs={bs} h={hidden}")
+        col.add(f"ablation/{model}/bwd_lazy", t_lazy * 1e3, "ms",
+                f"bs={bs} h={hidden}")
+        col.add(f"ablation/{model}/lazy_speedup", t_scan / t_lazy, "x",
+                "paper Fig.10 reports ~1.2x")
+
+        # ---- streaming / hoisting ---------------------------------------
+        f_on = jax.jit(lambda p, e: execute(fn, p, dev, e, hoist=True).buf)
+        f_off = jax.jit(lambda p, e: execute(fn, p, dev, e, hoist=False).buf)
+        t_on = time_fn(lambda: f_on(params, ext))
+        t_off = time_fn(lambda: f_off(params, ext))
+        col.add(f"ablation/{model}/hoist_on", t_on * 1e3, "ms", "")
+        col.add(f"ablation/{model}/hoist_off", t_off * 1e3, "ms", "")
+        col.add(f"ablation/{model}/stream_speedup", t_off / t_on, "x",
+                "eager W·x hoisted out of the sequential region")
+
+        # ---- fusion: kernel-launch census --------------------------------
+        comp_on = jax.jit(lambda p, e: execute(
+            fn, p, dev, e).buf).lower(params, ext).compile()
+        counts = count_hlo_kernels(comp_on.as_text())
+        launches = sum(v for k, v in counts.items() if k != "other")
+        col.add(f"ablation/{model}/hlo_kernels", launches, "kernels",
+                f"while-body+entry launch-sites after XLA fusion")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, models=("fixed_lstm", "tree_lstm", "graph_rnn"), bs=64,
+              hidden=256)
+    else:
+        bench(col, models=("tree_lstm", "graph_rnn"), bs=16, hidden=64)
+    return col
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Paper Fig. 9: graph construction/preprocessing overhead vs
+computation.
+
+Cavs reads the input graph "through I/O": per minibatch the only
+structure work is the host-side level packing (pure NumPy).  The
+dynamic-declaration tax is re-TRACING the program per batch (Fold's
+preprocessing / DyNet's per-sample graph build); we measure it as
+jax re-trace + re-compile time of the same step.
+
+Outputs both axes of Fig. 9: absolute seconds and the fraction of the
+total step the structure work takes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.scheduler import execute
+from repro.core.structure import fit_bucket, pack_batch, pack_external
+
+
+def bench(col: Collector, leaves_list, bs: int = 16, hidden: int = 32):
+    m = get_paper_model("tree_fc")
+    fn = m.make_vertex(hidden=hidden, input_dim=32)
+    params = fn.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for leaves in leaves_list:
+        graphs = m.make_graphs(bs, leaves=leaves)
+        inputs = [rng.standard_normal((g.num_nodes, 32)).astype(np.float32)
+                  for g in graphs]
+
+        # --- Cavs: host-side packing only -----------------------------
+        t0 = time.perf_counter()
+        sched = pack_batch(graphs, pad_arity=2)
+        ext_np = pack_external(inputs, sched, 32)
+        t_pack = time.perf_counter() - t0
+
+        dev = sched.to_device()
+        ext = jnp.asarray(ext_np)
+        run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+        t_compute = time_fn(lambda: run(params, ext))
+        col.add("graphcons/cavs_pack", t_pack * 1e3, "ms",
+                f"leaves={leaves} bs={bs}")
+        col.add("graphcons/cavs_compute", t_compute * 1e3, "ms",
+                f"leaves={leaves} bs={bs}")
+        col.add("graphcons/cavs_overhead_frac",
+                t_pack / (t_pack + t_compute), "frac",
+                f"leaves={leaves} (paper: Fold wastes 0.5-0.8 here)")
+
+        # --- dynamic declaration: re-trace per batch -------------------
+        def redeclare():
+            f = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+            return f(params, ext)
+
+        t_total_re = time_fn(redeclare, warmup=0, iters=2)
+        t_construct = max(t_total_re - t_compute, 0.0)
+        col.add("graphcons/redeclare_construct", t_construct * 1e3, "ms",
+                f"leaves={leaves} (trace+compile per batch)")
+        col.add("graphcons/redeclare_overhead_frac",
+                t_construct / max(t_total_re, 1e-12), "frac",
+                f"leaves={leaves}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, leaves_list=(32, 64, 128, 256, 512, 1024))
+    else:
+        bench(col, leaves_list=(32, 128))
+    return col
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Paper Table 2: memory-operation vs computation breakdown.
+
+Cavs' claim: gather/scatter movement happens only at the entrance/exit
+of F (one batched take / one batched update per task), so its share is
+small and shrinks with batch size.  We time:
+
+  - the full batched step,
+  - a 'memory ops only' variant (the same schedule executing ONLY the
+    gather + scatter data movement with the cell math stubbed out),
+
+and report both plus the dynamic-tensor buffer plan (bytes) from
+``core.memory`` — the quantity Table 2 tracks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.memory import plan_schedule
+from repro.core.scheduler import execute
+from repro.core.structure import pack_batch, pack_external
+from repro.core.vertex import VertexIO, VertexOutput
+
+
+def bench(col: Collector, bs_list, hidden: int = 64):
+    m = get_paper_model("tree_lstm")
+    rng = np.random.default_rng(0)
+    for bs in bs_list:
+        fn = m.make_vertex(hidden=hidden, input_dim=64)
+        graphs = m.make_graphs(bs, rng=rng)
+        params = fn.init(jax.random.PRNGKey(0))
+        sched = pack_batch(graphs, pad_arity=2)
+        inputs = [rng.standard_normal((g.num_nodes, 64)).astype(np.float32)
+                  for g in graphs]
+        ext = jnp.asarray(pack_external(inputs, sched, 64))
+        dev = sched.to_device()
+
+        run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+        t_full = time_fn(lambda: run(params, ext))
+
+        # memory-ops-only twin: gather + a trivial combine + scatter
+        @dataclasses.dataclass(frozen=True)
+        class MoveOnly:
+            state_dim: int = fn.state_dim
+            ext_dim: int = fn.ext_dim
+            arity: int = 2
+
+            def init(self, rng):
+                return {}
+
+            def apply(self, p, io: VertexIO) -> VertexOutput:
+                s = io.gather_sum()            # the gather movement
+                return VertexOutput(state=s)   # scatter movement
+
+        mv = MoveOnly()
+        run_mv = jax.jit(lambda e: execute(mv, {}, dev, e).buf)
+        ext_s = jnp.zeros((sched.num_ext_rows + 1, mv.ext_dim), jnp.float32)
+        t_mem = time_fn(lambda: run_mv(ext_s))
+
+        col.add("memory/full_step", t_full * 1e3, "ms", f"bs={bs}")
+        col.add("memory/memory_ops", t_mem * 1e3, "ms",
+                f"bs={bs} (gather+scatter schedule only)")
+        col.add("memory/mem_frac", t_mem / t_full, "frac",
+                f"bs={bs} (paper Table 2: shrinks with bs)")
+
+        plan = plan_schedule(sched, fn.state_dim, fn.ext_dim)
+        r = plan.report()
+        col.add("memory/buffer_bytes", r["total_bytes"], "bytes",
+                f"bs={bs} occupancy={r['occupancy']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, bs_list=(16, 32, 64, 128, 256))
+    else:
+        bench(col, bs_list=(16, 64))
+    return col
+
+
+if __name__ == "__main__":
+    main()

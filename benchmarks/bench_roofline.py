@@ -1,0 +1,66 @@
+"""Beyond-paper: the roofline table from the multi-pod dry-run.
+
+Reads ``results/dryrun.jsonl`` (produced by ``repro.launch.dryrun``)
+and prints the per-(arch × shape × mesh) three-term roofline rows that
+EXPERIMENTS.md §Roofline embeds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import Collector
+
+
+def load(path: str):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    # keep the newest row per cell
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(latest.values())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun.jsonl")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    rows = load(args.path)
+    if not rows:
+        col.add("roofline/missing", 0, "n/a",
+                "run `python -m repro.launch.dryrun --all` first")
+        return col
+    ok = err = skip = 0
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         str(r.get("mesh")))):
+        cell = f"{r['arch']}|{r['shape']}|{r.get('mesh')}"
+        if r["status"] == "skip":
+            skip += 1
+            continue
+        if r["status"] != "ok":
+            err += 1
+            col.add(f"roofline/{cell}/ERROR", 0, "n/a",
+                    str(r.get("error", ""))[:80])
+            continue
+        ok += 1
+        col.add(f"roofline/{cell}/t_bound", r["t_bound_s"], "s",
+                f"bottleneck={r['bottleneck']}")
+        col.add(f"roofline/{cell}/mfu_bound", r["mfu_bound"], "frac", "")
+    col.add("roofline/cells_ok", ok, "count", f"err={err} skip={skip}")
+    return col
+
+
+if __name__ == "__main__":
+    main()

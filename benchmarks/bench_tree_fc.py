@@ -1,0 +1,64 @@
+"""Paper Fig. 8(c)(g) + Table 1 (left): Tree-FC over complete binary
+trees (the Fold loom benchmark; 256 leaves → 511 vertices)."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.scheduler import execute, execute_serial
+from repro.core.structure import pack_batch, pack_external
+
+
+def setup(bs: int, hidden: int, leaves: int, input_dim: int = 64):
+    m = get_paper_model("tree_fc")
+    fn = m.make_vertex(hidden=hidden, input_dim=input_dim)
+    graphs = m.make_graphs(bs, leaves=leaves)
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch(graphs, pad_arity=fn.arity)
+    rng = np.random.default_rng(0)
+    inputs = [rng.standard_normal((g.num_nodes, input_dim)).astype(np.float32)
+              for g in graphs]
+    ext = jnp.asarray(pack_external(inputs, sched, input_dim))
+    return fn, params, sched, graphs, inputs, ext
+
+
+def bench(col: Collector, bs_list, leaves_list, hidden: int = 64):
+    for bs in bs_list:
+        for leaves in leaves_list:
+            fn, params, sched, graphs, inputs, ext = setup(bs, hidden, leaves)
+            dev = sched.to_device()
+            run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+            t_b = time_fn(lambda: run(params, ext))
+            col.add("tree_fc/batched", t_b * 1e3, "ms",
+                    f"bs={bs} leaves={leaves} h={hidden} "
+                    f"T={sched.T} M={sched.M}")
+            t_s = time_fn(
+                lambda: execute_serial(fn, params, graphs[:1], inputs[:1]),
+                warmup=1, iters=2) * bs
+            col.add("tree_fc/serial", t_s * 1e3, "ms",
+                    f"bs={bs} leaves={leaves} (extrapolated)")
+            col.add("tree_fc/speedup", t_s / t_b, "x",
+                    f"bs={bs} leaves={leaves}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, bs_list=(16, 64), leaves_list=(32, 128, 256, 512),
+              hidden=128)
+    else:
+        bench(col, bs_list=(8,), leaves_list=(32, 128), hidden=32)
+    return col
+
+
+if __name__ == "__main__":
+    main()

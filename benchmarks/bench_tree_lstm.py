@@ -1,0 +1,77 @@
+"""Paper Fig. 8(d)(h) + Table 1 (right): binary child-sum Tree-LSTM on
+SST-like random parses (≤ 54 leaves), batch-size sweep, training step
+(forward + parameter gradients) like the paper's epochs."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.scheduler import (execute, execute_lazy, execute_serial,
+                                  readout_roots)
+from repro.core.structure import fit_bucket, pack_batch, pack_external
+
+
+def setup(bs: int, hidden: int, input_dim: int = 64, seed: int = 0):
+    m = get_paper_model("tree_lstm")
+    fn = m.make_vertex(hidden=hidden, input_dim=input_dim)
+    rng = np.random.default_rng(seed)
+    graphs = m.make_graphs(bs, rng=rng)
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch(graphs, pad_arity=2)
+    inputs = [rng.standard_normal((g.num_nodes, input_dim)).astype(np.float32)
+              for g in graphs]
+    ext = jnp.asarray(pack_external(inputs, sched, input_dim))
+    return fn, params, sched, graphs, inputs, ext
+
+
+def bench(col: Collector, bs_list, h_list):
+    for bs in bs_list:
+        for h in h_list:
+            fn, params, sched, graphs, inputs, ext = setup(bs, h)
+            dev = sched.to_device()
+
+            def train_step(p, e):
+                def loss(pp, ee):
+                    buf = execute_lazy(fn, pp, ee, dev)
+                    return jnp.sum(readout_roots(buf, dev) ** 2)
+                return jax.grad(loss)(p, e)
+
+            step = jax.jit(train_step)
+            t_b = time_fn(lambda: step(params, ext))
+            col.add("tree_lstm/train_batched", t_b * 1e3, "ms",
+                    f"bs={bs} h={h} occ={sched.occupancy:.2f}")
+
+            fwd = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+            t_f = time_fn(lambda: fwd(params, ext))
+            col.add("tree_lstm/fwd_batched", t_f * 1e3, "ms",
+                    f"bs={bs} h={h}")
+
+            t_s = time_fn(
+                lambda: execute_serial(fn, params, graphs[:2], inputs[:2]),
+                warmup=1, iters=2) * (bs / 2)
+            col.add("tree_lstm/fwd_serial", t_s * 1e3, "ms",
+                    f"bs={bs} h={h} (extrapolated)")
+            col.add("tree_lstm/fwd_speedup", t_s / t_f, "x",
+                    f"bs={bs} h={h}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, bs_list=(16, 64, 256), h_list=(64, 256, 512))
+    else:
+        bench(col, bs_list=(16,), h_list=(64,))
+    return col
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Fig. 8(b)(f): Var-LSTM LM over variable-length sequences.
+
+Adds the policy the paper attributes to static-declaration TF:
+``pad_to_max`` — pad every sequence in the batch to the longest and
+run a dense scan (wasted compute on padding).  Cavs' level packing
+only schedules real vertices (occupancy < 1 shows as smaller M per
+level, not wasted FLOPs per slot... the padded slots DO cost compute;
+the packer reports occupancy so the waste is measured, and bucketing
+keeps one compiled program).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_fn
+from repro.configs.paper import get_paper_model
+from repro.core.scheduler import execute, execute_serial
+from repro.core.structure import chain, pack_batch, pack_external
+
+
+def setup(bs: int, hidden: int, max_len: int = 64, input_dim: int = 64,
+          seed: int = 0):
+    m = get_paper_model("var_lstm")
+    fn = m.make_vertex(hidden=hidden, input_dim=input_dim)
+    rng = np.random.default_rng(seed)
+    graphs = m.make_graphs(bs, max_len=max_len, rng=rng)
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch(graphs)
+    inputs = [rng.standard_normal((g.num_nodes, input_dim)).astype(np.float32)
+              for g in graphs]
+    ext = jnp.asarray(pack_external(inputs, sched, input_dim))
+    return fn, params, sched, graphs, inputs, ext
+
+
+def bench(col: Collector, bs_list, h_list, max_len: int = 64):
+    for bs in bs_list:
+        for h in h_list:
+            fn, params, sched, graphs, inputs, ext = setup(bs, h, max_len)
+            dev = sched.to_device()
+            run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
+            t_b = time_fn(lambda: run(params, ext))
+            col.add("var_lstm/batched", t_b * 1e3, "ms",
+                    f"bs={bs} h={h} occupancy={sched.occupancy:.2f}")
+
+            # pad-to-max static unrolling (the TF baseline of §2.2)
+            padded = [chain(max_len) for _ in range(bs)]
+            sched_p = pack_batch(padded)
+            inputs_p = [np.zeros((max_len, fn.input_dim), np.float32)
+                        for _ in range(bs)]
+            for i, x in enumerate(inputs):
+                inputs_p[i][: x.shape[0]] = x
+            ext_p = jnp.asarray(pack_external(inputs_p, sched_p,
+                                              fn.input_dim))
+            dev_p = sched_p.to_device()
+            run_p = jax.jit(lambda p, e: execute(fn, p, dev_p, e).buf)
+            t_p = time_fn(lambda: run_p(params, ext_p))
+            col.add("var_lstm/pad_to_max", t_p * 1e3, "ms",
+                    f"bs={bs} h={h}")
+            col.add("var_lstm/pack_vs_pad", t_p / t_b, "x",
+                    f"bs={bs} h={h} (Cavs packing vs static unroll)")
+
+            t_s = time_fn(
+                lambda: execute_serial(fn, params, graphs[:1], inputs[:1]),
+                warmup=1, iters=2) * bs
+            col.add("var_lstm/serial", t_s * 1e3, "ms",
+                    f"bs={bs} h={h} (extrapolated)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    col = Collector()
+    if args.full:
+        bench(col, bs_list=(8, 32, 128), h_list=(64, 256, 512))
+    else:
+        bench(col, bs_list=(16,), h_list=(64,), max_len=32)
+    return col
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: timing, CSV emission, model setup.
+
+All benchmarks print ``name,value,unit,detail`` CSV rows so
+``benchmarks/run.py`` can aggregate them into bench_output.txt.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5,
+            min_time_s: float = 0.0) -> float:
+    """Median wall seconds per call of a (jitted) thunk."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    t_total = 0.0
+    i = 0
+    while i < iters or t_total < min_time_s:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        t_total += dt
+        i += 1
+        if i > 100:
+            break
+    return float(np.median(times))
+
+
+def row(name: str, value: float, unit: str, detail: str = "") -> str:
+    line = f"{name},{value:.6g},{unit},{detail}"
+    print(line)
+    return line
+
+
+class Collector:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, value: float, unit: str, detail: str = ""):
+        self.rows.append(row(name, value, unit, detail))

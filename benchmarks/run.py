@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run``          — quick CPU settings (CI-sized)
+``python -m benchmarks.run --full``   — the paper-scale sweeps
+
+Emits ``name,value,unit,detail`` CSV rows (captured into
+bench_output.txt by the top-level runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_ablation, bench_fixed_lstm,
+                        bench_graph_construction, bench_memory,
+                        bench_roofline, bench_tree_fc, bench_tree_lstm,
+                        bench_var_lstm)
+
+SUITES = [
+    ("fixed_lstm (Fig 8a/e)", bench_fixed_lstm),
+    ("var_lstm (Fig 8b/f)", bench_var_lstm),
+    ("tree_fc (Fig 8c/g, Tab 1)", bench_tree_fc),
+    ("tree_lstm (Fig 8d/h, Tab 1-2)", bench_tree_lstm),
+    ("graph_construction (Fig 9)", bench_graph_construction),
+    ("memory (Tab 2)", bench_memory),
+    ("ablation (Fig 10)", bench_ablation),
+    ("roofline (beyond-paper)", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on suite names")
+    args = ap.parse_args()
+
+    print("suite,name,value,unit,detail")
+    failures = 0
+    for title, mod in SUITES:
+        if args.only and args.only not in title:
+            continue
+        print(f"# === {title} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.main(["--full"] if args.full else [])
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# SUITE FAILED: {title}", flush=True)
+            traceback.print_exc()
+        print(f"# --- {title} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

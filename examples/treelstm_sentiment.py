@@ -1,0 +1,82 @@
+"""Tree-LSTM sentiment classifier on SST-like data (paper §5 model (d)).
+
+End-to-end: dataset → bucketed packing → batched scheduling of F over
+G → classification head on root states → AdamW — the paper's flagship
+dynamic-NN workload, trained for a few hundred steps on CPU.
+
+Run:  PYTHONPATH=src python examples/treelstm_sentiment.py [--steps 150]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import execute_lazy, readout_roots
+from repro.core.structure import fit_bucket, pack_external
+from repro.data import sst_like_dataset
+from repro.models.treelstm import TreeLSTMVertex
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=64)
+    args = ap.parse_args()
+
+    input_dim = 32
+    ds = sst_like_dataset(512, input_dim=input_dim, seed=0)
+    fn = TreeLSTMVertex(input_dim=input_dim, hidden=args.hidden, arity=2)
+
+    # one bucket → one compiled program for every minibatch
+    bucket = fit_bucket(ds.graphs, args.batch)
+    rng_np = np.random.default_rng(0)
+
+    key = jax.random.PRNGKey(0)
+    params = {
+        "cell": fn.init(key),
+        "head": jax.random.normal(jax.random.PRNGKey(1),
+                                  (args.hidden, 2)) * 0.1,
+    }
+    opt = adamw_init(params)
+    sched_fn = warmup_cosine(3e-3, 20, args.steps)
+
+    def make_batch():
+        idx = rng_np.choice(len(ds), args.batch, replace=False)
+        graphs, inputs, labels = ds.batch(idx)
+        sched = bucket.pack(graphs)
+        ext = pack_external(inputs, sched, input_dim)
+        return sched.to_device(), jnp.asarray(ext), jnp.asarray(labels)
+
+    @jax.jit
+    def train_step(params, opt, ext, labels, dev):
+        def loss_fn(p):
+            buf = execute_lazy(fn, p["cell"], ext, dev)
+            root_h = readout_roots(buf, dev)[:, args.hidden:]
+            logits = root_h @ p["head"]
+            lse = jax.scipy.special.logsumexp(logits, -1)
+            nll = lse - jnp.take_along_axis(
+                logits, labels[:, None], 1)[:, 0]
+            acc = jnp.mean((jnp.argmax(logits, -1) == labels))
+            return jnp.mean(nll), acc
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(params, grads, opt,
+                                      lr=sched_fn(opt.step),
+                                      weight_decay=0.0)
+        return params, opt, loss, acc
+
+    for step in range(1, args.steps + 1):
+        dev, ext, labels = make_batch()
+        params, opt, loss, acc = train_step(params, opt, ext, labels, dev)
+        if step % 25 == 0 or step == 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"acc {float(acc):.2f}")
+    print("done — one compiled program served every batch "
+          "(bucketed packing; zero re-tracing)")
+
+
+if __name__ == "__main__":
+    main()

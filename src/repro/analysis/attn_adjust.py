@@ -1,0 +1,189 @@
+"""Kernel-adjusted memory accounting.
+
+The CPU dry-run lowers attention as the *chunked jnp twin* (the Pallas
+kernels need a real TPU to compile), which materializes its per-block
+score matrices to HBM.  On the TPU target those blocks live in VMEM
+scratch (kernels/flash_attention.py) — so the §Roofline memory term must
+not charge them.  Likewise the twin's GQA ``jnp.repeat`` of K/V blocks
+and the SSD twin's per-chunk decay matrices.
+
+The adjustment is *measured − modeled*:
+
+  1. **subtract** the HBM traffic of tensors whose (dtype, dims) mark
+     them as twin-only intermediates, identified from the walker's
+     ``by_shape`` histogram:
+       - 4-D f32 with trailing dims (block_q, block_k) → score/softmax
+         blocks (fwd AND bwd: cotangents share the shape);
+       - 4-D with dims[-2] == block_k and dims[1] == n_q ≠ n_kv → the
+         repeated-KV copies;
+       - trailing (chunk, chunk) f32 → SSD decay/G blocks.
+  2. **add back** the Pallas kernels' true DMA traffic, from their
+     BlockSpecs:
+       - flash fwd: (Q + O) + (K + V) · nq · group   (K/V re-streamed
+         once per q-block per q-head-in-group);
+       - flash bwd ≈ 2.5 × fwd (dQ/dK/dV sweeps), + 1 fwd for the remat
+         recompute when the config trains with full remat;
+       - SSD: ~3 passes over the chunk inputs/outputs, state hand-off
+         negligible.
+
+Both sides are recorded in the dry-run row so the raw number stays
+auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, layer_plan
+from repro.configs.shapes import ShapeCfg, enc_len_for
+
+# Must match the defaults in kernels/ops.py::attention / kernels usage.
+BLOCK_Q = 512
+BLOCK_K = 512
+DECODE_BLOCK_K = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSite:
+    """One attention call site (per layer instance, per microbatch)."""
+
+    batch: int
+    n_q: int
+    n_kv: int
+    sq: int
+    sk: int
+    head_dim: int
+    dtype_bytes: int
+    calls_per_step: float             # fwd(1) + remat(1) + bwd(2.5) etc.
+
+    @property
+    def flash_fwd_bytes(self) -> float:
+        nq = max(1, -(-self.sq // BLOCK_Q))
+        group = max(1, self.n_q // max(self.n_kv, 1))
+        q = self.batch * self.n_q * self.sq * self.head_dim * self.dtype_bytes
+        o = q
+        kv = 2 * self.batch * self.n_kv * self.sk * self.head_dim \
+            * self.dtype_bytes
+        return (q + o) + kv * nq * group
+
+    @property
+    def total_bytes(self) -> float:
+        return self.flash_fwd_bytes * self.calls_per_step
+
+
+def _attn_layer_counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(self-attn layers, cross-attn layers, encoder layers)."""
+    prologue, pattern, repeats = layer_plan(cfg)
+    n_self = 0
+    n_cross = 0
+    for d in prologue:
+        if d.mixer in ("attn", "mla"):
+            n_self += 1
+        if d.cross:
+            n_cross += 1
+    for d in pattern:
+        if d.mixer in ("attn", "mla"):
+            n_self += repeats
+        if d.cross:
+            n_cross += repeats
+    return n_self, n_cross, (cfg.enc_layers if cfg.enc_dec else 0)
+
+
+def attention_sites(cfg: ArchConfig, shape: ShapeCfg,
+                    n_micro: int) -> List[AttnSite]:
+    """Every attention call site for one step of this (arch × shape)."""
+    dt = 2 if cfg.compute_dtype == "bfloat16" else 4
+    n_self, n_cross, n_enc = _attn_layer_counts(cfg)
+    sites: List[AttnSite] = []
+
+    if shape.kind == "decode":
+        return sites                   # no adjustment needed (see module doc)
+
+    B = shape.global_batch // max(n_micro, 1) if shape.kind == "train" \
+        else shape.global_batch
+    micro_count = n_micro if shape.kind == "train" else 1
+    # train with remat-full: fwd + recompute + bwd(≈2.5 fwd passes)
+    calls = (1 + 1 + 2.5) if shape.kind == "train" else 1.0
+    calls *= micro_count
+
+    S = shape.seq_len
+    if cfg.attn_kind == "mla" and cfg.mla is not None:
+        hd = cfg.mla.nope_dim + cfg.mla.rope_dim
+        sites.append(AttnSite(B, cfg.n_heads, cfg.n_heads, S, S, hd, dt,
+                              calls * n_self))
+    elif n_self:
+        sk = S if cfg.window is None else min(S, cfg.window + BLOCK_Q)
+        sites.append(AttnSite(B, cfg.n_heads, cfg.n_kv_heads, S, S, cfg.dh,
+                              dt, calls * n_self))
+    if n_cross:
+        kv_len = cfg.cross_kv_len or enc_len_for(cfg, shape)
+        sites.append(AttnSite(B, cfg.n_heads, cfg.n_kv_heads, S, kv_len,
+                              cfg.dh, dt, calls * n_cross))
+    if n_enc:
+        enc_len = enc_len_for(cfg, shape)
+        sites.append(AttnSite(B, cfg.n_heads, cfg.n_kv_heads, enc_len,
+                              enc_len, cfg.dh, dt, calls * n_enc))
+    return sites
+
+
+def twin_overhead_bytes(by_shape: Dict, cfg: ArchConfig,
+                        chunk: Optional[int]) -> float:
+    """Traffic of twin-only intermediates, from the shape histogram.
+
+    ``by_shape`` keys are (dtype, dims) as produced by
+    ``analysis.hlo_cost``; values are (per-device) bytes.
+    """
+    total = 0.0
+    for (dt, dims), b in by_shape.items():
+        if len(dims) < 2:
+            continue
+        # score / p blocks (fwd + bwd cotangents): f32 [..., bq, bk]
+        if dt == "f32" and dims[-2:] in ((BLOCK_Q, BLOCK_K),
+                                         (BLOCK_Q, DECODE_BLOCK_K)):
+            total += b
+            continue
+        # repeated-KV copies: [..., Hq_shard, bk, D] with Hq != Hkv —
+        # identified by dims[-2] == block_k and a head-ish dims[-3]
+        if len(dims) >= 3 and dims[-2] in (BLOCK_K, DECODE_BLOCK_K) \
+                and cfg.n_heads and cfg.n_kv_heads \
+                and cfg.n_heads != cfg.n_kv_heads \
+                and dims[-1] in (cfg.dh, (cfg.mla.nope_dim + cfg.mla.rope_dim)
+                                 if cfg.mla else -1):
+            total += b
+            continue
+        # SSD decay/G blocks: [..., chunk, chunk]
+        if chunk and dims[-2:] == (chunk, chunk):
+            total += b
+    return total
+
+
+def kernel_model_bytes(cfg: ArchConfig, shape: ShapeCfg, n_micro: int,
+                       chips: int) -> float:
+    """Per-device DMA bytes the Pallas kernels would move instead."""
+    total = sum(s.total_bytes for s in attention_sites(cfg, shape, n_micro))
+    # SSD kernel traffic: ~3 passes over the per-chunk inputs/outputs.
+    if cfg.mamba is not None and shape.kind != "decode":
+        md = cfg.mamba
+        d_inner = md.expand * cfg.d_model
+        n_mamba = cfg.num_layers
+        if md.attn_every:
+            n_mamba = cfg.num_layers - cfg.num_layers // md.attn_every
+        tokens = shape.global_batch * shape.seq_len
+        per_pass = tokens * (2 * d_inner + 2 * md.d_state) * 4
+        calls = (4.5 * 1.0) if shape.kind == "train" else 1.0
+        total += 3 * per_pass * n_mamba * calls
+    return total / max(chips, 1)
+
+
+def adjust(measured_bytes: float, by_shape: Dict, cfg: ArchConfig,
+           shape: ShapeCfg, n_micro: int, chips: int) -> Dict[str, float]:
+    chunk = cfg.mamba.chunk if cfg.mamba is not None else None
+    sub = twin_overhead_bytes(by_shape, cfg, chunk)
+    addb = kernel_model_bytes(cfg, shape, n_micro, chips)
+    return {
+        "bytes_measured": measured_bytes,
+        "bytes_twin_overhead": sub,
+        "bytes_kernel_model": addb,
+        "bytes_adjusted": max(0.0, measured_bytes - sub) + addb,
+    }

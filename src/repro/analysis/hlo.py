@@ -1,0 +1,127 @@
+"""HLO text analysis: collective-byte accounting and op census.
+
+``cost_analysis()`` reports FLOPs and memory traffic but NOT collective
+bytes, so we parse the optimized HLO: every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction contributes its operand bytes.
+
+Parsing is purely lexical over instruction lines, e.g.::
+
+    %ag = bf16[16,4096,6144]{2,1,0} all-gather(bf16[1,4096,6144]{...} %x),
+          replica_groups=..., dimensions={0}
+
+We take the *output* shape for all-gather (bytes that land on each
+device) and the operand shape(s) for the others — a consistent
+per-device "bytes moved over ICI" convention, divided by link count in
+the roofline layer, not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """``bf16[16,4096,6144]`` → byte count.  Scalar ``[]`` → dtype bytes."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _instruction_lines(hlo_text: str) -> Iterable[str]:
+    """Join continuation lines: HLO pretty-printer wraps long instructions."""
+    buf = ""
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if "=" in s and re.match(r"^%?[\w.\-]+\s*=", s):
+            if buf:
+                yield buf
+            buf = s
+        elif buf:
+            buf += " " + s
+    if buf:
+        yield buf
+
+
+def _out_bytes(line: str) -> int:
+    """Bytes of the instruction's output (first shape on the RHS; tuples
+    sum their element shapes)."""
+    rhs = line.split("=", 1)[1].strip()
+    # Tuple outputs: "(bf16[...]{...}, bf16[...]{...}) op-name(...)"
+    if rhs.startswith("("):
+        end = rhs.index(")")
+        return sum(parse_shape_bytes(p) for p in rhs[1:end].split(",")
+                   if "[" in p)
+    return parse_shape_bytes(rhs)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output-bytes histogram over the module.
+
+    Convention: for every collective we count the bytes of its *result*
+    on each participating device — for all-reduce that equals the input
+    bytes; for all-gather the gathered (larger) tensor; for
+    reduce-scatter the scattered (smaller) shard.  This is the number a
+    ring schedule moves through each link up to the (n-1)/n factor,
+    folded into the roofline's effective-bandwidth constant.
+    """
+    out: Dict[str, int] = {}
+    for line in _instruction_lines(hlo_text):
+        rhs = line.split("=", 1)[1]
+        for kind in COLLECTIVES:
+            # opcode occurs as "kind(" or "kind-start(" / "kind-done("
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                if kind == "all-reduce" and "all-reduce-done" in rhs:
+                    continue
+                out[kind] = out.get(kind, 0) + _out_bytes(line)
+                break
+    return out
+
+
+def count_ops(hlo_text: str, opcodes: Tuple[str, ...]) -> Dict[str, int]:
+    """Census of specific opcodes (fusion / dot / while / ...)."""
+    out: Dict[str, int] = {k: 0 for k in opcodes}
+    for line in _instruction_lines(hlo_text):
+        rhs = line.split("=", 1)[1]
+        for k in opcodes:
+            if re.search(rf"\b{re.escape(k)}(\.\d+)?\(", rhs):
+                out[k] += 1
+                break
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSummary:
+    per_kind: Dict[str, int]
+
+    @property
+    def total(self) -> int:
+        return sum(self.per_kind.values())
+
+
+def summarize(hlo_text: str) -> CollectiveSummary:
+    return CollectiveSummary(per_kind=collective_bytes(hlo_text))

@@ -1,0 +1,490 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — useless
+for scan-structured programs (this framework scans over layers,
+microbatches and attention blocks precisely so the HLO stays small).
+This module re-derives the roofline inputs by walking the HLO call
+graph and multiplying loop bodies by their trip counts, which XLA
+conveniently records on each while instruction::
+
+    backend_config={"known_trip_count":{"n":"126"}, ...}
+
+Accounting conventions (documented where the numbers are consumed,
+EXPERIMENTS.md §Roofline):
+
+  - **flops**: ``dot`` = 2 · |out| · Π(contracting dims); elementwise /
+    reduce = |elements|; everything inside a fused computation counts
+    flops but NOT bytes.
+  - **hbm bytes**: per *kernel-launch-like* instruction (fusion, dot,
+    copy, dynamic-(update-)slice, reduce, custom-call, …) operand bytes
+    + output bytes — i.e. fusion-aware HBM traffic, the quantity the
+    memory roofline term wants.
+  - **collective bytes**: output bytes per collective instruction, by
+    kind, multiplied through loop trips like everything else.
+
+Validated against XLA's own numbers on loop-free programs
+(tests/test_hlo_cost.py) and against hand-counts on scans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# Ops whose output is a view / bookkeeping — no kernel, no HBM traffic.
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "bitcast-convert", "after-all", "iota",
+             "partition-id", "replica-id", "reshape"}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def parse_shapes(type_str: str) -> List[Shape]:
+    """All array shapes in a (possibly tuple) HLO type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append(Shape(dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _total_bytes(type_str: str) -> int:
+    return sum(s.bytes for s in parse_shapes(type_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str                       # raw text after the operand list
+
+    @property
+    def out_bytes(self) -> int:
+        return _total_bytes(self.out_type)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]           # instr name -> output type string
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: HBM bytes bucketed by (dtype, dims) — lets callers re-attribute
+    #: traffic of specific intermediates (e.g. the chunked-attention
+    #: score blocks that a Pallas kernel would keep in VMEM).
+    by_shape: Dict[Tuple[str, Tuple[int, ...]], float] = \
+        dataclasses.field(default_factory=dict)
+    #: collective bytes bucketed by (kind, dtype, dims) — the profiler
+    #: view the perf iteration uses to find WHICH tensor dominates.
+    coll_by_shape: Dict[Tuple[str, str, Tuple[int, ...]], float] = \
+        dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0) -> None:
+        self.flops += times * other.flops
+        self.hbm_bytes += times * other.hbm_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + times * v
+        for k, v in other.by_shape.items():
+            self.by_shape[k] = self.by_shape.get(k, 0.0) + times * v
+        for k, v in other.coll_by_shape.items():
+            self.coll_by_shape[k] = self.coll_by_shape.get(k, 0.0) \
+                + times * v
+
+    def add_bytes(self, type_str: str) -> int:
+        total = 0
+        for s in parse_shapes(type_str):
+            self.by_shape[(s.dtype, s.dims)] = \
+                self.by_shape.get((s.dtype, s.dims), 0.0) + s.bytes
+            total += s.bytes
+        self.hbm_bytes += total
+        return total
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+# NB: tuple types embed /*index=k*/ comments, so the tuple alternative
+# must allow anything but parens (tuple types never nest parens).
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+
+
+def _split_instr_lines(text: str):
+    """Yield (computation_header_or_None, line) with wraps joined."""
+    buf = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        starts_instr = re.match(r"^(ROOT\s+)?%?[\w.\-]+\s*=", s)
+        if starts_instr:
+            if buf is not None:
+                yield buf
+            buf = s
+        elif buf is not None and s not in ("}",) and not s.startswith("%") \
+                and not s.startswith("ENTRY"):
+            buf += " " + s
+        if s.endswith("{") and ("->" in s):
+            if buf is not None and "=" not in buf.split("{")[0]:
+                buf = None
+            yield ("HEADER", s)
+        if s == "}":
+            if buf is not None:
+                yield buf
+                buf = None
+            yield ("END", s)
+    if buf is not None:
+        yield buf
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for item in _split_instr_lines(text):
+        if isinstance(item, tuple):
+            kind, line = item
+            if kind == "HEADER":
+                m = _COMP_HEADER.match(line)
+                if m:
+                    cur = Computation(name=m.group(2), instrs=[], shapes={})
+                    comps[cur.name] = cur
+                    if m.group(1):
+                        entry_name = cur.name
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(item)
+        if not m:
+            continue
+        _, name, out_type, opcode, rest = m.groups()
+        # operand list = up to the matching close paren
+        depth, j = 1, 0
+        for j, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str, attrs = rest[:j], rest[j + 1:]
+        operands = [re.sub(r"/\*[^*]*\*/", "", o).strip().lstrip("%")
+                    for o in _split_top(operand_str) if o.strip()]
+        ins = Instr(name=name, out_type=out_type, opcode=opcode,
+                    operands=operands, attrs=attrs)
+        cur.instrs.append(ins)
+        cur.shapes[name] = out_type
+    comps["__entry__"] = comps.get(entry_name) or _largest(comps)
+    return comps
+
+
+def _largest(comps):
+    return max(comps.values(), key=lambda c: len(c.instrs)) if comps else \
+        Computation("empty", [], {})
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, cur = [], 0, ""
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur:
+        out.append(cur)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cost walking
+# ---------------------------------------------------------------------------
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_shapes = parse_shapes(ins.out_type)
+    out_elems = sum(s.elems for s in out_shapes)
+    m = _LHS_C_RE.search(ins.attrs)
+    lhs_type = comp.shapes.get(ins.operands[0], "") if ins.operands else ""
+    lhs = parse_shapes(lhs_type)
+    if not m or not lhs:
+        return 2.0 * out_elems            # degenerate fallback
+    k = 1
+    for d in (int(x) for x in m.group(1).split(",") if x):
+        if d < len(lhs[0].dims):
+            k *= lhs[0].dims[d]
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    for op in ins.operands:
+        t = comp.shapes.get(op)
+        if t:
+            total += _total_bytes(t)
+    return total
+
+
+def _account_io(c: Cost, ins: Instr, comp: Computation) -> None:
+    """Charge this instruction's operand+output bytes (shape-bucketed)."""
+    c.add_bytes(ins.out_type)
+    for op in ins.operands:
+        t = comp.shapes.get(op)
+        if t:
+            c.add_bytes(t)
+
+
+_WINDOW_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _account_fusion_io(c: Cost, ins: Instr, comp: Computation,
+                       fused: Computation) -> None:
+    """Operand/output bytes of a fusion, window-aware.
+
+    A fusion parameter consumed ONLY by slicing ops (dynamic-slice /
+    gather / slice) reads just the sliced windows, not the whole array —
+    critical for scan programs, where every loop iteration's fusions
+    take the full ``[layers, ...]`` stacked buffers as operands but
+    touch one slice.  Likewise a fusion whose root is a
+    dynamic-update-slice writes the update window, not the buffer.
+    """
+    # ---- output ----------------------------------------------------------
+    root = fused.instrs[-1] if fused.instrs else None
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and len(root.operands) > 1:
+        upd_t = fused.shapes.get(root.operands[1])
+        if upd_t:
+            c.add_bytes(upd_t)          # read-modify-write of the window
+            c.add_bytes(upd_t)
+        else:
+            c.add_bytes(ins.out_type)
+    else:
+        c.add_bytes(ins.out_type)
+
+    # ---- operands --------------------------------------------------------
+    # map parameter index -> effective read type(s)
+    param_of = {}                       # instr name -> param index
+    for fi in fused.instrs:
+        if fi.opcode == "parameter":
+            m = re.match(r"(\d+)", fi.attrs)
+            if m:
+                param_of[fi.name] = int(m.group(1))
+    consumers: Dict[str, List[Instr]] = {}
+    for fi in fused.instrs:
+        for o in fi.operands:
+            if o in param_of:
+                consumers.setdefault(o, []).append(fi)
+
+    for op_name in ins.operands:
+        t = comp.shapes.get(op_name)
+        if not t:
+            continue
+        # which fused parameter does this operand bind to?
+        idx = ins.operands.index(op_name)
+        pnames = [n for n, i in param_of.items() if i == idx]
+        cons = consumers.get(pnames[0], []) if pnames else []
+        if cons and all(x.opcode in _WINDOW_OPS for x in cons):
+            for x in cons:
+                c.add_bytes(x.out_type)      # window reads only
+        else:
+            c.add_bytes(t)
+
+
+def _instr_cost(ins: Instr, comp: Computation,
+                comps: Dict[str, Computation],
+                memo: Dict[str, Cost], *, fused: bool) -> Cost:
+    c = Cost()
+    op = ins.opcode
+
+    if op in _FREE_OPS:
+        return c
+
+    if op == "while":
+        body = _BODY_RE.search(ins.attrs)
+        cond = _COND_RE.search(ins.attrs)
+        trip_m = _TRIP_RE.search(ins.attrs)
+        trip = int(trip_m.group(1)) if trip_m else 1
+        if body:
+            c.add(_comp_cost(comps[body.group(1)], comps, memo), trip)
+        if cond:
+            c.add(_comp_cost(comps[cond.group(1)], comps, memo), trip + 1)
+        return c
+
+    if op == "conditional":
+        m = _BRANCHES_RE.search(ins.attrs)
+        if m:
+            branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+            costs = [_comp_cost(comps[b], comps, memo) for b in branches
+                     if b in comps]
+            if costs:
+                # one branch executes; take the max (pessimistic).
+                best = max(costs, key=lambda x: x.flops + x.hbm_bytes)
+                c.add(best)
+        if not fused:
+            _account_io(c, ins, comp)
+        return c
+
+    if op in ("fusion", "call", "async-start"):
+        m = _CALLS_RE.search(ins.attrs) or re.search(
+            r"to_apply=%?([\w.\-]+)", ins.attrs)
+        sub_comp = comps.get(m.group(1)) if m else None
+        if sub_comp is not None:
+            sub = _comp_cost(sub_comp, comps, memo, fused=(op == "fusion"))
+            c.flops += sub.flops
+            for k, v in sub.collectives.items():
+                c.collectives[k] = c.collectives.get(k, 0.0) + v
+            if op != "fusion":
+                c.hbm_bytes += sub.hbm_bytes
+                for k, v in sub.by_shape.items():
+                    c.by_shape[k] = c.by_shape.get(k, 0.0) + v
+        if not fused:
+            if op == "fusion" and sub_comp is not None:
+                _account_fusion_io(c, ins, comp, sub_comp)
+            else:
+                _account_io(c, ins, comp)
+        return c
+
+    # collectives -------------------------------------------------------
+    base = op.replace("-start", "").replace("-done", "")
+    if base in COLLECTIVE_OPS:
+        if not op.endswith("-done"):
+            c.collectives[base] = c.collectives.get(base, 0.0) \
+                + ins.out_bytes
+            for s in parse_shapes(ins.out_type):
+                key = (base, s.dtype, s.dims)
+                c.coll_by_shape[key] = c.coll_by_shape.get(key, 0.0) \
+                    + s.bytes
+            if not fused:
+                _account_io(c, ins, comp)
+        return c
+
+    # compute ops ---------------------------------------------------------
+    if op == "dot":
+        c.flops += _dot_flops(ins, comp)
+    elif op == "convolution":
+        # rough: 2 · |out| · |kernel| / |out-features|
+        out = parse_shapes(ins.out_type)
+        rhs = parse_shapes(comp.shapes.get(ins.operands[1], "")) \
+            if len(ins.operands) > 1 else []
+        k = rhs[0].elems if rhs else 1
+        c.flops += 2.0 * (out[0].elems if out else 0) * max(1, k // max(
+            1, (out[0].dims[-1] if out and out[0].dims else 1)))
+    elif op in ("reduce", "reduce-window"):
+        ops_bytes = _operand_bytes(ins, comp)
+        c.flops += ops_bytes / 4.0        # ~1 flop per input element
+    elif op == "sort":
+        n = sum(s.elems for s in parse_shapes(ins.out_type))
+        c.flops += n * max(1, n.bit_length())
+    elif op in ("dynamic-slice", "gather"):
+        # Reads only the sliced window, NOT the whole operand — charging
+        # full operand bytes would bill every scan iteration for the
+        # entire [layers, ...] stacked-params/residual buffer (measured
+        # as ~34 TB of phantom traffic on llama3-405b).
+        if not fused:
+            c.add_bytes(ins.out_type)          # window read + write ≈ 2·out
+            c.add_bytes(ins.out_type)
+        return c
+    elif op in ("dynamic-update-slice", "scatter"):
+        # Writes only the update window (read-modify-write of the
+        # window); the rest of the buffer is aliased in place.
+        if not fused:
+            upd = ins.operands[1] if len(ins.operands) > 1 else None
+            t = comp.shapes.get(upd) if upd else None
+            if t:
+                c.add_bytes(t)
+                c.add_bytes(t)
+            else:
+                c.add_bytes(ins.out_type)
+        return c
+    elif op in ("copy", "copy-start", "copy-done", "transpose", "slice",
+                "pad", "concatenate", "broadcast", "reverse",
+                "select-and-scatter"):
+        pass                               # data movement only
+    else:
+        # elementwise & friends: 1 flop per output element
+        c.flops += sum(s.elems for s in parse_shapes(ins.out_type))
+
+    if not fused:
+        _account_io(c, ins, comp)
+    return c
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[str, Cost], *, fused: bool = False) -> Cost:
+    key = comp.name + ("#f" if fused else "")
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    memo[key] = total                     # break cycles defensively
+    for ins in comp.instrs:
+        total.add(_instr_cost(ins, comp, comps, memo, fused=fused))
+    return total
+
+
+def analyze(hlo_text: str) -> Cost:
+    """Trip-count-aware {flops, hbm_bytes, collective bytes} of a module."""
+    comps = parse_module(hlo_text)
+    entry = comps["__entry__"]
+    memo: Dict[str, Cost] = {}
+    return _comp_cost(entry, comps, memo)

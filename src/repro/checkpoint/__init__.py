@@ -1,0 +1,5 @@
+"""Checkpoint substrate: sharded, atomic, async, reshard-on-restore."""
+
+from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,0 +1,15 @@
+"""Architecture configs: the 10 assigned architectures + paper models.
+
+``get_config(name)`` resolves any registered config by id.
+"""
+
+from repro.configs.base import (ArchConfig, BlockDesc, MoECfg, MLACfg,
+                                MambaCfg, layer_plan, register, get_config,
+                                list_configs)
+
+# Import for registration side effects.
+from repro.configs import archs as _archs  # noqa: F401
+from repro.configs import paper as _paper  # noqa: F401
+
+__all__ = ["ArchConfig", "BlockDesc", "MoECfg", "MLACfg", "MambaCfg",
+           "layer_plan", "register", "get_config", "list_configs"]

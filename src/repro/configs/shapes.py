@@ -1,0 +1,108 @@
+"""Assigned input shapes and dry-run input specs (ShapeDtypeStructs).
+
+The four LM shapes (per assignment):
+
+  - ``train_4k``:    seq 4,096  × global_batch 256  → ``train_step``
+  - ``prefill_32k``: seq 32,768 × global_batch 32   → ``prefill_step``
+  - ``decode_32k``:  cache 32,768 × global_batch 128 → ``serve_step``
+    (one new token against a seq_len KV cache)
+  - ``long_500k``:   cache 524,288 × global_batch 1 → ``serve_step``;
+    sub-quadratic archs only (SSM / hybrid / SWA) — skips recorded.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every
+model input so the dry-run lowers with zero allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeCfg) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("skip: pure full-attention arch — 500k decode requires "
+                "sub-quadratic sequence mixing (SSM/hybrid/SWA)")
+    return None
+
+
+def cells(archs: List[ArchConfig]) -> List[Dict[str, Any]]:
+    """All 40 (arch × shape) cells with skip annotations."""
+    out = []
+    for cfg in archs:
+        for shape in SHAPES.values():
+            out.append({"arch": cfg.name, "shape": shape.name,
+                        "skip": applicable(cfg, shape)})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct inputs
+# ---------------------------------------------------------------------------
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg,
+                microbatches: int = 1) -> Dict[str, Any]:
+    """Model inputs for one step of the given kind, as SDS stand-ins.
+
+    train:   tokens/labels ``[GB, S]`` (+ frontend stubs);
+    prefill: tokens ``[GB, S]``;
+    decode:  tokens ``[GB, 1]`` + absolute positions ``[GB]``
+             (the KV cache itself is a separate spec — see
+             ``launch.dryrun.cache_specs``).
+    """
+    GB, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _tok((GB, S))
+        specs["labels"] = _tok((GB, S))
+    elif shape.kind == "prefill":
+        specs["tokens"] = _tok((GB, S))
+    else:  # decode
+        specs["tokens"] = _tok((GB, 1))
+        specs["positions"] = _tok((GB,))
+
+    # Modality frontends are stubs per the assignment: precomputed
+    # embeddings arrive as inputs.
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (GB, cfg.cross_kv_len, cfg.d_model), dt)
+    if cfg.enc_dec:
+        # Encoder input: precomputed audio frame embeddings.  Frames are
+        # seq_len//4 (the usual 4x frame-rate reduction of a conv stem).
+        enc_len = max(S // 4, 16) if shape.kind != "decode" else None
+        if enc_len is not None:
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (GB, enc_len, cfg.d_model), dt)
+    return specs
+
+
+def enc_len_for(cfg: ArchConfig, shape: ShapeCfg) -> int:
+    """Encoder length used for enc-dec archs at this shape."""
+    return max(shape.seq_len // 4, 16)

@@ -1,0 +1,313 @@
+"""The Cavs scheduler: batched level-synchronous execution (paper Alg. 1).
+
+Forward: one ``lax.scan`` step per batching task ``V_t`` — gather child
+states from the node-state buffer, apply the static vertex function ``F``
+once over all ``M`` slots, scatter the results into the buffer block
+``[t*M, (t+1)*M)`` (the dynamic-tensor offset discipline, §3.3).
+
+Backward: two modes.
+
+* ``grad_mode="scan"`` — plain ``jax.grad`` through the scan.  XLA's scan
+  transpose saves per-step residuals and replays them in exact reverse
+  order: this *is* the paper's task stack ``S`` (Alg. 1 BACKWARD), and the
+  transpose of the buffer ``take`` *is* the ``∂gather = scatter`` rule
+  (§3.4).
+
+* ``grad_mode="lazy"`` — the paper's *lazy batching* (§3.5): the reverse
+  sweep propagates only the state-chain cotangents; the parameter
+  gradients (the paper's canonical lazy operators: "the math operators
+  for computing gradients of the model parameters") are computed **once,
+  batched over all vertices of all graphs**, as a single flat VJP over
+  the ``T*M`` node slots, instead of ``T`` per-task VJPs.  As a bonus the
+  forward saves only the node buffer (activations inside ``F`` are
+  recomputed), so this doubles as a rematerialization policy.
+
+The *eager* side of §3.5 (streaming) is ``hoist=True``: when ``F``
+declares ``project_inputs`` (its vertex-independent prefix, e.g. the
+``W·x`` input projections), it is evaluated for ALL external rows in one
+batched call *before* the sequential region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.structure import DeviceSchedule, InputGraph, LevelSchedule
+from repro.core.vertex import (VertexFunction, VertexIO, VertexOutput,
+                               apply_unbatched, has_eager_projection)
+
+Params = Any
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExecResult:
+    """Outcome of scheduling ``F`` over a packed batch of graphs.
+
+    ``buf``: ``[T*M + 1, S]`` node-state buffer (row ``T*M`` = sentinel).
+    ``pushed``: ``[T*M, O]`` per-slot pushed outputs, or ``None``.
+    """
+
+    buf: Array
+    pushed: Optional[Array] = None
+
+
+# ---------------------------------------------------------------------------
+# Level utilities
+# ---------------------------------------------------------------------------
+
+def _level_io(buf: Array, external: Array, child_ids: Array,
+              child_mask: Array, ext_ids: Array, node_mask: Array,
+              state_dim: int) -> VertexIO:
+    """Materialize the VertexIO of one batching task from the buffer.
+
+    ``jnp.take`` on the buffer is the Cavs ``gather`` primitive (its VJP
+    is the scatter-add that §3.4 prescribes); the take on ``external`` is
+    ``pull``.
+    """
+    M, A = child_ids.shape
+    ch = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, state_dim)
+    ext = jnp.take(external, ext_ids, axis=0)
+    return VertexIO(child_states=ch, child_mask=child_mask.astype(buf.dtype),
+                    external=ext, node_mask=node_mask.astype(buf.dtype))
+
+
+def _maybe_hoist(fn: VertexFunction, params: Params, external: Array,
+                 hoist: bool) -> Tuple[Array, bool]:
+    """If ``F`` declares an eager prefix and hoisting is on, project ALL
+    external rows in one batched call (streaming, §3.5).  Returns the
+    external matrix plus whether projection still needs to happen
+    per-level (hoisting ablated OFF)."""
+    if has_eager_projection(fn):
+        if hoist:
+            return fn.project_inputs(params, external), False
+        return external, True
+    return external, False
+
+
+# ---------------------------------------------------------------------------
+# Batched forward (the paper's FORWARD, Alg. 1)
+# ---------------------------------------------------------------------------
+
+def execute(fn: VertexFunction, params: Params, sched: DeviceSchedule,
+            external: Array, *, hoist: bool = True,
+            collect_push: bool = False,
+            dtype: jnp.dtype = jnp.float32) -> ExecResult:
+    """Run the batching policy over a packed minibatch of graphs.
+
+    ``external``: ``[R + 1, X_raw]`` packed external inputs (last row is
+    the zero sentinel).  Differentiable in ``params`` and ``external``.
+    """
+    T, M = sched.T, sched.M
+    S = fn.state_dim
+    ext, project_per_level = _maybe_hoist(fn, params, external, hoist)
+    buf0 = jnp.zeros((T * M + 1, S), dtype)
+
+    def step(buf: Array, xs):
+        t, child_ids, child_mask, ext_ids, node_mask = xs
+        io = _level_io(buf, ext, child_ids, child_mask, ext_ids, node_mask, S)
+        if project_per_level:
+            # Streaming ablated off: the eager prefix runs inside the
+            # sequential region, once per batching task.
+            io = dataclasses.replace(
+                io, external=fn.project_inputs(params, io.external))
+        out = fn.apply(params, io)
+        state = (out.state * io.node_mask[:, None]).astype(dtype)
+        buf = jax.lax.dynamic_update_slice(buf, state, (t * M, 0))
+        ys = out.push if collect_push else None
+        return buf, ys
+
+    xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
+          sched.ext_ids, sched.node_mask)
+    buf, pushes = jax.lax.scan(step, buf0, xs)
+    pushed = None
+    if collect_push and pushes is not None:
+        pushed = pushes.reshape(T * M, -1)
+    return ExecResult(buf=buf, pushed=pushed)
+
+
+# ---------------------------------------------------------------------------
+# Lazy-batched gradients (the paper's lazy batching, §3.5)
+# ---------------------------------------------------------------------------
+
+def _forward_buf(fn: VertexFunction, params: Params, sched: DeviceSchedule,
+                 ext: Array, dtype) -> Array:
+    """Forward scan producing only the node buffer (push unsupported here:
+    in this framework pushes are realized as post-scan readouts, which is
+    itself the lazy treatment of ``push``)."""
+    T, M, S = sched.T, sched.M, fn.state_dim
+    buf0 = jnp.zeros((T * M + 1, S), dtype)
+
+    def step(buf, xs):
+        t, child_ids, child_mask, ext_ids, node_mask = xs
+        io = _level_io(buf, ext, child_ids, child_mask, ext_ids, node_mask, S)
+        out = fn.apply(params, io)
+        state = (out.state * io.node_mask[:, None]).astype(dtype)
+        return jax.lax.dynamic_update_slice(buf, state, (t * M, 0)), None
+
+    xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
+          sched.ext_ids, sched.node_mask)
+    buf, _ = jax.lax.scan(step, buf0, xs)
+    return buf
+
+
+def _flat_io(fn: VertexFunction, sched: DeviceSchedule, buf: Array,
+             ext: Array) -> VertexIO:
+    """One VertexIO covering ALL ``T*M`` slots at once (for the single
+    batched parameter-gradient evaluation)."""
+    T, M, A, S = sched.T, sched.M, sched.A, fn.state_dim
+    flat_children = sched.child_ids.reshape(T * M, A)
+    ch = jnp.take(buf, flat_children.reshape(-1), axis=0).reshape(T * M, A, S)
+    e = jnp.take(ext, sched.ext_ids.reshape(T * M), axis=0)
+    return VertexIO(child_states=ch,
+                    child_mask=sched.child_mask.reshape(T * M, A).astype(buf.dtype),
+                    external=e,
+                    node_mask=sched.node_mask.reshape(T * M).astype(buf.dtype))
+
+
+def _zero_ct(x):
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) or \
+       jnp.issubdtype(jnp.asarray(x).dtype, jnp.complexfloating):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def execute_lazy(fn: VertexFunction, params: Params, external: Array,
+                 sched: DeviceSchedule) -> Array:
+    """Like :func:`execute` (hoist on, no push) but with the lazy-batched
+    backward.  Returns the ``[T*M + 1, S]`` buffer."""
+    ext, _ = _maybe_hoist(fn, params, external, True)
+    return _forward_buf(fn, params, sched, ext, ext.dtype)
+
+
+def _lazy_fwd(fn, params, external, sched):
+    ext, hoist_vjp = (external, None)
+    if has_eager_projection(fn):
+        ext, hoist_vjp = jax.vjp(
+            lambda p, e: fn.project_inputs(p, e), params, external)
+    buf = _forward_buf(fn, params, sched, ext, ext.dtype)
+    return buf, (params, external, ext, buf, sched, hoist_vjp)
+
+
+def _lazy_bwd(fn, res, g_buf):
+    params, external, ext, buf, sched, hoist_vjp = res
+    T, M, A, S = sched.T, sched.M, sched.A, fn.state_dim
+
+    # -- reverse sweep: state-chain cotangents only (params closed over) --
+    def rev_step(g, xs):
+        t, child_ids, child_mask, ext_ids, node_mask = xs
+        io = _level_io(buf, ext, child_ids, child_mask, ext_ids, node_mask, S)
+        g_state = jax.lax.dynamic_slice(g, (t * M, 0), (M, S))
+        g_state = g_state * io.node_mask[:, None]
+
+        def f_of_children(ch):
+            out = fn.apply(params, dataclasses.replace(io, child_states=ch))
+            return out.state * io.node_mask[:, None]
+
+        _, vjp_ch = jax.vjp(f_of_children, io.child_states)
+        (g_ch,) = vjp_ch(g_state)
+        g_ch = g_ch * io.child_mask[..., None]
+        # ∂gather = scatter (§3.4): push child cotangents back into the buffer.
+        g = g.at[child_ids.reshape(-1)].add(
+            g_ch.reshape(M * A, S), mode="drop",
+            unique_indices=False, indices_are_sorted=False)
+        return g, g_state
+
+    xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
+          sched.ext_ids, sched.node_mask)
+    _, g_states = jax.lax.scan(rev_step, g_buf, xs, reverse=True)
+    g_state_flat = g_states.reshape(T * M, S)
+
+    # -- lazy batching: ONE parameter/external VJP over all T*M slots ----
+    io_flat = _flat_io(fn, sched, buf, ext)
+
+    def f_flat(p, e_rows):
+        out = fn.apply(p, dataclasses.replace(io_flat, external=e_rows))
+        return out.state * io_flat.node_mask[:, None]
+
+    _, vjp_flat = jax.vjp(f_flat, params, io_flat.external)
+    g_params, g_ext_rows = vjp_flat(g_state_flat)
+
+    # Scatter pulled-row cotangents back to the packed external matrix
+    # (∂pull = push, §3.4).
+    g_ext = jnp.zeros_like(ext).at[sched.ext_ids.reshape(T * M)].add(
+        g_ext_rows, mode="drop")
+    if hoist_vjp is not None:
+        g_params_hoist, g_external = hoist_vjp(g_ext)
+        g_params = jax.tree.map(jnp.add, g_params, g_params_hoist)
+    else:
+        g_external = g_ext
+    g_sched = jax.tree.map(_zero_ct, sched)
+    return g_params, g_external, g_sched
+
+
+execute_lazy.defvjp(_lazy_fwd, _lazy_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Readouts (lazy `push`: external consumers read the buffer after the scan)
+# ---------------------------------------------------------------------------
+
+def readout_roots(buf: Array, sched: DeviceSchedule) -> Array:
+    """``[K, S]`` root states (e.g. tree classification heads)."""
+    return jnp.take(buf, sched.root_slots, axis=0)
+
+
+def readout_nodes(buf: Array, sched: DeviceSchedule) -> Array:
+    """``[K, N, S]`` per-node states in original node order (e.g. LM
+    per-position hidden states); padded nodes read the zero sentinel."""
+    K, N = sched.slot_of.shape
+    out = jnp.take(buf, sched.slot_of.reshape(-1), axis=0).reshape(K, N, -1)
+    return out * sched.node_valid[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Serial reference policy (the dynamic-declaration baseline)
+# ---------------------------------------------------------------------------
+
+def execute_serial(fn: VertexFunction, params: Params,
+                   graphs: Sequence[InputGraph],
+                   inputs: Sequence[np.ndarray]) -> List[np.ndarray]:
+    """Per-vertex, per-sample execution — the DyNet-style baseline the
+    paper compares against (no cross-sample batching, one kernel per
+    vertex).  Returns, per sample, a ``[num_nodes, S]`` state matrix.
+
+    Used for correctness oracles and for the Fig. 8 serial-vs-batched
+    benchmarks.
+    """
+    results = []
+    A = max(max(g.max_arity for g in graphs), 1,
+            getattr(fn, "arity", 1))     # fixed-arity cells (e.g. Tree-FC)
+    S = fn.state_dim
+    for g, x in zip(graphs, inputs):
+        lvl = g.levels()
+        states = np.zeros((g.num_nodes, S), np.float32)
+        x = np.asarray(x, np.float32)
+        for v in np.argsort(lvl, kind="stable"):
+            ch = g.children[v]
+            cs = np.zeros((A, S), np.float32)
+            cm = np.zeros((A,), np.float32)
+            for a, c in enumerate(ch):
+                cs[a] = states[c]
+                cm[a] = 1.0
+            er = g.ext_row[v]
+            ext = x[er] if er >= 0 else np.zeros(x.shape[1], np.float32)
+            ext = jnp.asarray(ext)
+            if has_eager_projection(fn):
+                # Serial baseline still needs apply()'s expected layout:
+                # project this single vertex's pull (one tiny kernel per
+                # vertex — exactly the inefficiency the paper measures).
+                ext = fn.project_inputs(params, ext[None])[0]
+            out = apply_unbatched(fn, params, jnp.asarray(cs), jnp.asarray(cm),
+                                  ext)
+            states[v] = np.asarray(out.state)
+        results.append(states)
+    return results

@@ -1,0 +1,406 @@
+"""Input graphs ``G`` and their packing into level schedules (Cavs §3.2).
+
+The *input graph* is per-example data, not program: it is read "through
+I/O" (paper §3) and never triggers recompilation.  Host-side, pure-NumPy
+code turns a minibatch of graphs into a :class:`LevelSchedule` — dense
+integer tensors encoding the paper's batching tasks ``V_t``:
+
+  level 0 = all leaves of all K graphs, level t = all vertices whose
+  children were all evaluated by level t-1 (breadth-first wavefronts).
+
+One scan step over the schedule is one batching task: it evaluates ``F``
+once, batched over the ``M`` slots of that level.  Because the schedule
+is *data*, the compiled program is identical for every minibatch — the
+Cavs property that buys us static-graph optimization on dynamic models.
+
+Slot layout (the dynamic-tensor view, §3.3): the node-state buffer has
+``T*M + 1`` rows; the vertex at level ``t``, lane ``m`` owns row
+``t*M + m`` — i.e. task ``V_t`` writes the contiguous block
+``[t*M, (t+1)*M)``, the JAX rendering of the paper's monotonically
+advancing ``offset``.  Row ``T*M`` is the zero *sentinel*: absent
+children and padding point at it, so gathers never need bounds branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Per-sample input graphs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InputGraph:
+    """One example's structure ``G``: a DAG given as child lists.
+
+    ``children[v]`` lists the vertex ids ``v`` gathers from (its inputs);
+    ``ext_row[v]`` is the row of this sample's external-input matrix the
+    vertex pulls (or -1 to pull the zero row).  Vertices may appear in any
+    order; levels are derived here.
+    """
+
+    children: List[List[int]]
+    ext_row: Optional[List[int]] = None
+
+    def __post_init__(self) -> None:
+        n = len(self.children)
+        if self.ext_row is None:
+            self.ext_row = list(range(n))
+        if len(self.ext_row) != n:
+            raise ValueError("ext_row length != num nodes")
+        for v, ch in enumerate(self.children):
+            for c in ch:
+                if not (0 <= c < n):
+                    raise ValueError(f"node {v} has out-of-range child {c}")
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.children)
+
+    def levels(self) -> np.ndarray:
+        """Topological level of each vertex (leaves = 0). Raises on cycles."""
+        n = self.num_nodes
+        lvl = np.full(n, -1, np.int64)
+        # Kahn-style: process in waves.
+        indeg_children_done = [0] * n
+        remaining = n
+        pending = list(range(n))
+        while remaining:
+            progressed = False
+            nxt = []
+            for v in pending:
+                ch = self.children[v]
+                if all(lvl[c] >= 0 for c in ch):
+                    lvl[v] = 0 if not ch else 1 + max(lvl[c] for c in ch)
+                    remaining -= 1
+                    progressed = True
+                else:
+                    nxt.append(v)
+            pending = nxt
+            if not progressed and remaining:
+                raise ValueError("input graph has a cycle")
+        return lvl
+
+    def roots(self) -> List[int]:
+        """Vertices no other vertex gathers from (outputs of the structure)."""
+        has_parent = np.zeros(self.num_nodes, bool)
+        for ch in self.children:
+            for c in ch:
+                has_parent[c] = True
+        return [v for v in range(self.num_nodes) if not has_parent[v]]
+
+    @property
+    def max_arity(self) -> int:
+        return max((len(c) for c in self.children), default=0)
+
+
+def chain(n: int) -> InputGraph:
+    """A sequence RNN structure: vertex t gathers from t-1 (Fig. 2b)."""
+    return InputGraph(children=[[] if t == 0 else [t - 1] for t in range(n)])
+
+
+def balanced_binary_tree(num_leaves: int) -> InputGraph:
+    """Complete binary tree with ``num_leaves`` leaves (Tree-FC benchmark).
+
+    Requires a power of two, mirroring the paper's synthetic generator
+    (256 leaves -> 511 vertices).
+    """
+    if num_leaves < 1 or (num_leaves & (num_leaves - 1)):
+        raise ValueError("num_leaves must be a positive power of two")
+    children: List[List[int]] = [[] for _ in range(num_leaves)]
+    frontier = list(range(num_leaves))
+    while len(frontier) > 1:
+        nxt = []
+        for i in range(0, len(frontier), 2):
+            children.append([frontier[i], frontier[i + 1]])
+            nxt.append(len(children) - 1)
+        frontier = nxt
+    return InputGraph(children=children)
+
+
+def random_binary_tree(num_leaves: int, rng: np.random.Generator) -> InputGraph:
+    """Random binary bracketing over ``num_leaves`` leaves (SST-like)."""
+    if num_leaves < 1:
+        raise ValueError("need >= 1 leaf")
+    children: List[List[int]] = [[] for _ in range(num_leaves)]
+    frontier = list(range(num_leaves))
+    while len(frontier) > 1:
+        i = int(rng.integers(0, len(frontier) - 1))
+        children.append([frontier[i], frontier[i + 1]])
+        frontier[i : i + 2] = [len(children) - 1]
+    return InputGraph(children=children)
+
+
+def random_dag(num_nodes: int, rng: np.random.Generator,
+               max_arity: int = 3) -> InputGraph:
+    """Random DAG with multi-parent fan-out (paper Fig. 2d: general
+    graph-structured RNNs).  Node v gathers from 1..max_arity random
+    earlier nodes; a node may feed several parents."""
+    if num_nodes < 1:
+        raise ValueError("need >= 1 node")
+    children: List[List[int]] = [[]]
+    for v in range(1, num_nodes):
+        k = int(rng.integers(1, min(max_arity, v) + 1))
+        ch = sorted(rng.choice(v, size=k, replace=False).tolist())
+        children.append([int(c) for c in ch])
+    return InputGraph(children=children)
+
+
+def from_parent_pointers(parents: Sequence[int]) -> InputGraph:
+    """Build a tree from parent pointers (-1 = root), treebank style."""
+    n = len(parents)
+    children: List[List[int]] = [[] for _ in range(n)]
+    for v, p in enumerate(parents):
+        if p >= 0:
+            children[p].append(v)
+    return InputGraph(children=children)
+
+
+# ---------------------------------------------------------------------------
+# Level schedule (packed batch of graphs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LevelSchedule:
+    """Dense encoding of the batching tasks for K graphs (host, NumPy).
+
+    Shapes: ``T`` levels, ``M`` slots per level, ``A`` max arity,
+    ``K`` samples, ``N`` max nodes per sample, ``R = K*N`` external rows.
+    The sentinel buffer row is ``T*M``; the sentinel external row is ``R``.
+    """
+
+    child_ids: np.ndarray   # [T, M, A] int32 -> buffer rows (sentinel T*M)
+    child_mask: np.ndarray  # [T, M, A] float32
+    ext_ids: np.ndarray     # [T, M] int32 -> external rows (sentinel R)
+    node_mask: np.ndarray   # [T, M] float32
+    slot_of: np.ndarray     # [K, N] int32: buffer row of node n of sample k
+    node_valid: np.ndarray  # [K, N] float32
+    root_slots: np.ndarray  # [K] int32 (first root per sample)
+    num_nodes: np.ndarray   # [K] int32
+
+    @property
+    def T(self) -> int:
+        return self.child_ids.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.child_ids.shape[1]
+
+    @property
+    def A(self) -> int:
+        return self.child_ids.shape[2]
+
+    @property
+    def K(self) -> int:
+        return self.slot_of.shape[0]
+
+    @property
+    def N(self) -> int:
+        return self.slot_of.shape[1]
+
+    @property
+    def num_slots(self) -> int:
+        """Buffer rows excluding the sentinel."""
+        return self.T * self.M
+
+    @property
+    def sentinel_slot(self) -> int:
+        return self.T * self.M
+
+    @property
+    def num_ext_rows(self) -> int:
+        return self.K * self.N
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slots holding real vertices (padding efficiency)."""
+        return float(self.node_mask.sum()) / max(1, self.num_slots)
+
+    def to_device(self) -> "DeviceSchedule":
+        return DeviceSchedule(
+            child_ids=jnp.asarray(self.child_ids),
+            child_mask=jnp.asarray(self.child_mask),
+            ext_ids=jnp.asarray(self.ext_ids),
+            node_mask=jnp.asarray(self.node_mask),
+            slot_of=jnp.asarray(self.slot_of),
+            node_valid=jnp.asarray(self.node_valid),
+            root_slots=jnp.asarray(self.root_slots),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceSchedule:
+    """Device-resident view of a :class:`LevelSchedule` (all jnp arrays)."""
+
+    child_ids: jax.Array
+    child_mask: jax.Array
+    ext_ids: jax.Array
+    node_mask: jax.Array
+    slot_of: jax.Array
+    node_valid: jax.Array
+    root_slots: jax.Array
+
+    @property
+    def T(self) -> int:
+        return self.child_ids.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.child_ids.shape[1]
+
+    @property
+    def A(self) -> int:
+        return self.child_ids.shape[2]
+
+    @property
+    def num_slots(self) -> int:
+        return self.T * self.M
+
+
+def pack_batch(
+    graphs: Sequence[InputGraph],
+    pad_levels: Optional[int] = None,
+    pad_width: Optional[int] = None,
+    pad_arity: Optional[int] = None,
+    pad_nodes: Optional[int] = None,
+) -> LevelSchedule:
+    """Pack K input graphs into one level schedule (the Cavs scheduler's
+    breadth-first batching, Alg. 1, precomputed host-side).
+
+    ``pad_*`` fix the padded dims (for bucketing — reusing one compiled
+    program across minibatches); when omitted the tightest fit is used.
+    """
+    K = len(graphs)
+    if K == 0:
+        raise ValueError("empty batch")
+    levels = [g.levels() for g in graphs]
+    T = max(int(l.max()) + 1 for l in levels)
+    A = max(g.max_arity for g in graphs)
+    A = max(A, 1)
+    N = max(g.num_nodes for g in graphs)
+    if pad_levels is not None:
+        if pad_levels < T:
+            raise ValueError(f"pad_levels={pad_levels} < required T={T}")
+        T = pad_levels
+    if pad_arity is not None:
+        if pad_arity < A:
+            raise ValueError(f"pad_arity={pad_arity} < required A={A}")
+        A = pad_arity
+    if pad_nodes is not None:
+        if pad_nodes < N:
+            raise ValueError(f"pad_nodes={pad_nodes} < required N={N}")
+        N = pad_nodes
+
+    # Width of each batching task V_t across the whole minibatch.
+    counts = np.zeros(T, np.int64)
+    for l in levels:
+        for t, c in zip(*np.unique(l, return_counts=True)):
+            counts[t] += c
+    M = int(counts.max())
+    if pad_width is not None:
+        if pad_width < M:
+            raise ValueError(f"pad_width={pad_width} < required M={M}")
+        M = pad_width
+
+    sentinel = T * M
+    ext_sentinel = K * N
+
+    child_ids = np.full((T, M, A), sentinel, np.int32)
+    child_mask = np.zeros((T, M, A), np.float32)
+    ext_ids = np.full((T, M), ext_sentinel, np.int32)
+    node_mask = np.zeros((T, M), np.float32)
+    slot_of = np.full((K, N), sentinel, np.int32)
+    node_valid = np.zeros((K, N), np.float32)
+    root_slots = np.zeros(K, np.int32)
+    num_nodes = np.asarray([g.num_nodes for g in graphs], np.int32)
+
+    cursor = np.zeros(T, np.int64)  # next free lane per level
+    for k, (g, lvl) in enumerate(zip(graphs, levels)):
+        order = np.argsort(lvl, kind="stable")
+        for v in order:
+            t = int(lvl[v])
+            m = int(cursor[t])
+            cursor[t] += 1
+            slot = t * M + m
+            slot_of[k, v] = slot
+            node_valid[k, v] = 1.0
+            node_mask[t, m] = 1.0
+            er = g.ext_row[v]
+            ext_ids[t, m] = k * N + er if er >= 0 else ext_sentinel
+            for a, c in enumerate(g.children[v]):
+                child_ids[t, m, a] = slot_of[k, c]  # children are at lower levels
+                child_mask[t, m, a] = 1.0
+        r = g.roots()[0] if g.roots() else g.num_nodes - 1
+        root_slots[k] = slot_of[k, r]
+
+    return LevelSchedule(
+        child_ids=child_ids, child_mask=child_mask, ext_ids=ext_ids,
+        node_mask=node_mask, slot_of=slot_of, node_valid=node_valid,
+        root_slots=root_slots, num_nodes=num_nodes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bucketing (the dynamic-tensor memory plan ties into this; core/memory.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Fixed padded dims so distinct minibatches share one compiled program."""
+
+    pad_levels: int
+    pad_width: int
+    pad_arity: int
+    pad_nodes: int
+
+    def pack(self, graphs: Sequence[InputGraph]) -> LevelSchedule:
+        return pack_batch(graphs, self.pad_levels, self.pad_width,
+                          self.pad_arity, self.pad_nodes)
+
+
+def fit_bucket(graphs: Sequence[InputGraph], batch_size: int,
+               round_levels: int = 8, round_width: int = 8,
+               round_nodes: int = 8) -> BucketSpec:
+    """Derive a bucket covering any ``batch_size``-subset of ``graphs``.
+
+    Rounds dims up so near-miss batches still hit the same compiled
+    program (recompilation is the Fold/DyNet overhead Cavs removes).
+    """
+    def _round(x: int, r: int) -> int:
+        return ((x + r - 1) // r) * r
+
+    depth = max(int(g.levels().max()) + 1 for g in graphs)
+    arity = max(max(g.max_arity for g in graphs), 1)
+    nodes = max(g.num_nodes for g in graphs)
+    # Worst-case level width: the batch_size widest levels could coincide.
+    per_graph_width = [int(np.bincount(g.levels()).max()) for g in graphs]
+    width = sum(sorted(per_graph_width)[-batch_size:])
+    return BucketSpec(
+        pad_levels=_round(depth, round_levels),
+        pad_width=_round(width, round_width),
+        pad_arity=arity,
+        pad_nodes=_round(nodes, round_nodes),
+    )
+
+
+def pack_external(inputs: Sequence[np.ndarray], schedule: LevelSchedule,
+                  ext_dim: int) -> np.ndarray:
+    """Pack per-sample external inputs ``[n_k, X]`` into ``[K*N + 1, X]``.
+
+    The final row is the zero sentinel pulled by input-less vertices.
+    """
+    K, N = schedule.K, schedule.N
+    out = np.zeros((K * N + 1, ext_dim), np.float32)
+    for k, x in enumerate(inputs):
+        if x.shape[0] > N:
+            raise ValueError(f"sample {k} has {x.shape[0]} rows > pad_nodes={N}")
+        out[k * N : k * N + x.shape[0], :] = x
+    return out

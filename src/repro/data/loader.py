@@ -1,0 +1,114 @@
+"""Prefetching loader with straggler mitigation.
+
+The device should never wait on the host: a background thread keeps a
+bounded queue of ready batches (double/triple buffering).  Straggler
+guard: each logical shard has a *hot spare* — if the primary source
+misses its deadline, the spare (which regenerates the same deterministic
+slice, see ``data/synthetic.py``) serves the batch and the primary is
+marked slow.  On a real cluster the spare is a neighbour host; here both
+run in-process, but the control flow (deadline, takeover, accounting) is
+the production one.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+class ShardedSource:
+    """A deterministic, restartable batch source for one data shard.
+
+    ``make_iter(shard, num_shards, start_batch)`` must return an iterator
+    positioned at ``start_batch`` — restartability is what checkpoints
+    rely on to resume mid-epoch without data duplication.
+    """
+
+    def __init__(self, make_iter: Callable[[int, int, int], Iterator],
+                 shard: int, num_shards: int):
+        self.make_iter = make_iter
+        self.shard = shard
+        self.num_shards = num_shards
+        self.batch_index = 0
+        self._it = make_iter(shard, num_shards, 0)
+
+    def next_batch(self) -> Any:
+        b = next(self._it)
+        self.batch_index += 1
+        return b
+
+    def seek(self, batch_index: int) -> None:
+        self._it = self.make_iter(self.shard, self.num_shards, batch_index)
+        self.batch_index = batch_index
+
+
+class PrefetchLoader:
+    """Background-thread prefetch + deadline-based straggler takeover."""
+
+    def __init__(self, source: ShardedSource, *, depth: int = 2,
+                 deadline_s: Optional[float] = None,
+                 spare: Optional[ShardedSource] = None,
+                 delay_fn: Optional[Callable[[int], float]] = None):
+        self.source = source
+        self.spare = spare
+        self.deadline_s = deadline_s
+        self.delay_fn = delay_fn          # test hook: inject slowness
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.takeovers = 0                # straggler events observed
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    # -- producer ---------------------------------------------------------
+    def _produce_one(self) -> Any:
+        idx = self.source.batch_index
+        if self.delay_fn is not None:
+            delay = self.delay_fn(idx)
+            if delay > 0:
+                if (self.deadline_s is not None and delay > self.deadline_s
+                        and self.spare is not None):
+                    # Primary would miss its deadline: hot-spare takeover.
+                    self.takeovers += 1
+                    self.spare.seek(idx)
+                    b = self.spare.next_batch()
+                    self.source.seek(idx + 1)   # keep primary in sync
+                    return b
+                time.sleep(delay)
+        return self.source.next_batch()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                b = self._produce_one()
+            except StopIteration:
+                self._q.put(None)
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put(b, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    # -- consumer ---------------------------------------------------------
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = self._q.get()
+        if b is None:
+            raise StopIteration
+        return b
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,196 @@
+"""Blocked (flash) attention for TPU: Pallas kernel + chunked-jnp twin.
+
+``flash_attention`` is the Pallas kernel: grid ``(B, Hq, Sq/bq, Sk/bk)``
+with the key axis innermost; per-(q-block) online-softmax statistics
+(m, l) and the output accumulator live in VMEM scratch across the key
+iterations.  Blocks are MXU-aligned (bq, bk multiples of 128 lanes; D is
+the contraction).  Supports causal masking, sliding windows (SWA) and
+GQA (the key/value index map folds the query head onto its KV group, so
+KV blocks are fetched once per group — no host-side ``repeat``).
+
+``attention_chunked`` is the same schedule written as nested ``lax.scan``
+in plain jnp: identical O(bq·bk) working set, runs on any backend.  It is
+what the CPU dry-run lowers (the Pallas kernel needs a real TPU to
+compile) — the roofline terms it produces match the kernel's blocking by
+construction.  ``ref.mha`` remains the naive oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  sq: int, sk: int, block_q: int, block_k: int,
+                  num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                      # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (sk - sq)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < sk                                         # key padding
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                       # [bq, 128]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)[:, None]                       # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev - m_new)                           # [bq, 128]
+    p = jnp.exp(s - m_new[:, :1])                             # [bq, bk]
+    l_new = l_prev * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=1)[:, None], l_prev.shape)
+    acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """``q``: ``[B, Hq, Sq, D]``; ``k``/``v``: ``[B, Hkv, Sk, D]``."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, _round_up(Sq, 8))
+    bk = min(block_k, _round_up(Sk, 8))
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    nq, nk = Sqp // bq, Skp // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        sq=Sq, sk=Sk, block_q=bq, block_k=bk, num_k_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (replicated)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running sum (replicated)
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :]
+
+
+# ---------------------------------------------------------------------------
+# Chunked-jnp twin (any backend; used by the CPU dry-run)
+# ---------------------------------------------------------------------------
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      scale: Optional[float] = None, block_q: int = 512,
+                      block_k: int = 512) -> jax.Array:
+    """Same online-softmax schedule as the kernel, in portable jnp.
+
+    Working set per step: ``[B, H, bq, bk]`` logits — never the full
+    ``Sq×Sk`` score matrix, so 32k–512k contexts lower with sane memory.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    nq, nk = Sqp // bq, Skp // bk
+    qs = qp.reshape(B, Hq, nq, bq, D)
+    ks = kp.reshape(B, Hkv, nk, bk, D)
+    vs = vp.reshape(B, Hkv, nk, bk, D)
+
+    def q_block(carry_q):
+        iq, qb = carry_q                      # qb: [B, Hq, bq, D]
+
+        def k_step(st, xs):
+            m, l, acc = st
+            ik, kb, vb = xs                   # kb/vb: [B, Hkv, bk, D]
+            kbg = jnp.repeat(kb, group, axis=1)
+            vbg = jnp.repeat(vb, group, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32),
+                           kbg.astype(jnp.float32)) * scale
+            qpos = iq * bq + jnp.arange(bq)[:, None] + (Sk - Sq)
+            kpos = ik * bk + jnp.arange(bk)[None, :]
+            valid = kpos < Sk
+            if causal:
+                valid &= kpos <= qpos
+            if window is not None:
+                valid &= kpos > qpos - window
+            s = jnp.where(valid[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vbg.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        st0 = (jnp.full((B, Hq, bq), NEG_INF, jnp.float32),
+               jnp.zeros((B, Hq, bq), jnp.float32),
+               jnp.zeros((B, Hq, bq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, st0,
+            (jnp.arange(nk), jnp.moveaxis(ks, 2, 0), jnp.moveaxis(vs, 2, 0)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l[..., None]).astype(q.dtype)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qs, 2, 0)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, Hq, Sqp, D)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,98 @@
+"""Pallas row gather/scatter — the Cavs primitives' TPU backend (§4).
+
+Cavs implements ``gather``/``scatter``/``pull``/``push`` as one
+customized ``memcpy`` kernel that moves many slices in a single launch.
+The TPU rendering: a Pallas kernel whose *grid index map is driven by
+scalar-prefetched indices* — row ``i`` of the output block-maps to row
+``idx[i]`` of the source, so the DMA engine streams whole ``[1, D]``
+rows HBM→VMEM→HBM with zero gather arithmetic in the vector units.
+
+``gather_rows``  : out[i, :] = src[idx[i], :]
+``scatter_rows`` : dst[idx[i], :] = rows[i, :]   (unique indices; dst is
+                   aliased in-place, untouched rows preserved)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the index maps
+    out_ref[...] = src_ref[...]
+
+
+def _scatter_kernel(idx_ref, dst_ref, rows_ref, out_ref):
+    del idx_ref, dst_ref  # dst rides along only for the alias
+    out_ref[...] = rows_ref[...]
+
+
+def gather_rows(src: jax.Array, idx: jax.Array, *, block_d: int = 512,
+                rows_per_block: int = 8,
+                interpret: bool = False) -> jax.Array:
+    """``src``: ``[R, D]``; ``idx``: ``[n]`` int32 in ``[0, R)`` →
+    ``[n, D]``.
+
+    Rows are fetched ``rows_per_block`` at a time; within a block the
+    index map selects each source row independently via scalar prefetch
+    (``idx`` lives in SMEM before the grid starts).
+    """
+    R, D = src.shape
+    n = idx.shape[0]
+    bd = min(block_d, _round_up(D, 128))
+    Dp = _round_up(D, bd)
+    srcp = jnp.pad(src, ((0, 0), (0, Dp - D)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, Dp // bd),
+        in_specs=[pl.BlockSpec((1, bd), lambda i, j, idx_ref: (idx_ref[i], j))],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, Dp), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), srcp)
+    return out[:, :D]
+
+
+def scatter_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array, *,
+                 block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """``dst``: ``[R, D]``; ``idx``: ``[n]`` unique int32; ``rows``:
+    ``[n, D]`` → updated ``[R, D]`` (functional; dst buffer aliased)."""
+    R, D = dst.shape
+    n = idx.shape[0]
+    bd = min(block_d, _round_up(D, 128))
+    Dp = _round_up(D, bd)
+    dstp = jnp.pad(dst, ((0, 0), (0, Dp - D)))
+    rowsp = jnp.pad(rows, ((0, 0), (0, Dp - D)))
+
+    sink = pl.BlockSpec((1, bd), lambda i, j, idx_ref: (idx_ref[i], j))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, Dp // bd),
+        in_specs=[
+            sink,                                                # dst (alias)
+            pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),  # rows
+        ],
+        out_specs=sink,
+    )
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Dp), dst.dtype),
+        input_output_aliases={1: 0},   # dst (first tensor operand) → out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), dstp, rowsp)
+    return out[:, :D]

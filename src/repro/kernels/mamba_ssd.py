@@ -1,0 +1,139 @@
+"""Mamba-2 SSD (state-space duality) Pallas kernel.
+
+The chunked SSD algorithm splits the sequence into chunks of length
+``Q``: *within* a chunk the recurrence is computed in its dual quadratic
+(attention-like) form — dense ``[Q, Q]`` work that maps onto the MXU —
+while *across* chunks a tiny linear recurrence carries the ``[P, N]``
+state.  The Pallas kernel computes the per-chunk quadratic part (the
+FLOP hot-spot): grid ``(B·H·nc,)``, one chunk fully VMEM-resident
+(``Q×P`` inputs, ``Q×Q`` decay matrix, ``P×N`` out-state), MXU matmuls
+for ``C Bᵀ`` and the two contractions.  The cross-chunk scan and the
+off-diagonal correction stay in jnp (they are O(nc) and bandwidth
+-trivial).
+
+Validated against ``ref.ssd_reference`` (exact sequential recurrence)
+and ``ref.ssd_chunked`` (jnp twin of this blocking).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(a_ref, dt_ref, x_ref, b_ref, c_ref, y_ref, st_ref, *,
+                      H: int, nc: int, Q: int):
+    g = pl.program_id(0)
+    h = (g // nc) % H
+    a = a_ref[h]                                        # scalar (SMEM)
+
+    dt = dt_ref[...].astype(jnp.float32)                # [1, Q]
+    x = x_ref[0].astype(jnp.float32)                    # [Q, P]
+    Bm = b_ref[0].astype(jnp.float32)                   # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                   # [Q, N]
+
+    da = dt * a                                         # [1, Q]
+    cs = jnp.cumsum(da, axis=-1)                        # [1, Q] inclusive
+    seg = cs[0][:, None] - cs[0][None, :]               # [Q, Q] s_i - s_j
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, Q]
+    dx = dt[0][:, None] * x                             # [Q, P]
+    y = jax.lax.dot_general(G * L, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # Chunk-final state: S = Σ_j exp(total - s_j) · dx_j ⊗ B_j   → [P, N]
+    decay_to_end = jnp.exp(cs[0][-1] - cs[0])           # [Q]
+    w = decay_to_end[:, None] * dx                      # [Q, P]
+    st = jax.lax.dot_general(w, Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    st_ref[0] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: Optional[jax.Array] = None, *,
+                   chunk: int = 128, initial_state: Optional[jax.Array] = None,
+                   interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full SSD with the Pallas intra-chunk kernel.
+
+    Shapes as in :func:`repro.kernels.ref.ssd_chunked`:
+    ``x``: ``[Bt, L, H, P]``, ``dt``: ``[Bt, L, H]``, ``A``: ``[H]``,
+    ``B``/``C``: ``[Bt, L, N]``.  Returns ``(y, final_state)``.
+    """
+    Bt, Lseq, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, Lseq)
+    assert Lseq % Q == 0, "sequence length must divide the chunk size"
+    nc = Lseq // Q
+    f32 = jnp.float32
+
+    # Layout: fold (Bt, H, nc) into the grid axis; chunk data contiguous.
+    xg = (x.reshape(Bt, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+          .reshape(Bt * H * nc, Q, P))
+    dtg = (dt.reshape(Bt, nc, Q, H).transpose(0, 3, 1, 2)
+           .reshape(Bt * H * nc, Q))
+    Bg = B.reshape(Bt * nc, Q, N)
+    Cg = C.reshape(Bt * nc, Q, N)
+
+    def bc_map(g, a_ref, H=H, nc=nc):
+        # (b, h, c) → row b*nc + c of the [Bt*nc, Q, N] array.
+        return ((g // (H * nc)) * nc + g % nc, 0, 0)
+
+    kernel = functools.partial(_ssd_chunk_kernel, H=H, nc=nc, Q=Q)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Bt * H * nc,),
+        in_specs=[
+            pl.BlockSpec((1, Q), lambda g, a_ref: (g, 0)),        # dt
+            pl.BlockSpec((1, Q, P), lambda g, a_ref: (g, 0, 0)),  # x
+            pl.BlockSpec((1, Q, N), bc_map),                      # B
+            pl.BlockSpec((1, Q, N), bc_map),                      # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda g, a_ref: (g, 0, 0)),  # y_diag
+            pl.BlockSpec((1, P, N), lambda g, a_ref: (g, 0, 0)),  # states
+        ],
+    )
+    y_diag, states = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Bt * H * nc, Q, P), f32),
+                   jax.ShapeDtypeStruct((Bt * H * nc, P, N), f32)],
+        interpret=interpret,
+    )(A.astype(f32), dtg.astype(f32), xg, Bg, Cg)
+
+    y_diag = (y_diag.reshape(Bt, H, nc, Q, P).transpose(0, 2, 3, 1, 4))
+    states = states.reshape(Bt, H, nc, P, N).transpose(0, 2, 1, 3, 4)
+
+    # ---- cross-chunk linear recurrence (jnp; O(nc) tiny) ----------------
+    dtc = dt.reshape(Bt, nc, Q, H).astype(f32)
+    da = jnp.moveaxis(dtc * A[None, None, None, :], -1, 2)    # [Bt,nc,H,Q]
+    chunk_decay = jnp.exp(jnp.sum(da, axis=-1))               # [Bt,nc,H]
+    s0 = (jnp.zeros((Bt, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(s, inp):
+        st, dec = inp
+        return dec[:, :, None, None] * s + st, s
+
+    s_fin, entering = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                   # [Bt,nc,H,P,N]
+
+    Cc = C.reshape(Bt, nc, Q, N).astype(f32)
+    decay_from_start = jnp.exp(jnp.cumsum(da, axis=-1))       # [Bt,nc,H,Q]
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, entering, decay_from_start)
+
+    y = (y_diag + y_off).reshape(Bt, Lseq, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), s_fin

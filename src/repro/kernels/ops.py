@@ -1,0 +1,169 @@
+"""Backend dispatch for the kernel layer.
+
+Every op has three implementations:
+
+  - ``pallas``   — the TPU kernel (``pl.pallas_call`` + BlockSpec);
+                   interpret mode on non-TPU backends (exercised by the
+                   test suite; too slow for CPU hot loops),
+  - ``chunked``  — portable jnp with the *same blocking/memory profile*
+                   as the kernel (what the CPU dry-run lowers),
+  - ``ref``      — the naive oracle (``ref.py``).
+
+``impl="auto"`` picks ``pallas`` on TPU and ``chunked`` (or ``ref`` for
+ops whose oracle is already optimal under XLA, e.g. row gather) on CPU.
+Set the env var ``REPRO_KERNEL_IMPL`` to pin a backend globally.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cell_kernels, decode_attention as dec
+from repro.kernels import flash_attention as fa
+from repro.kernels import gather_scatter as gsc
+from repro.kernels import mamba_ssd as ssd
+from repro.kernels import ref
+
+
+def _default_impl() -> str:
+    forced = os.environ.get("REPRO_KERNEL_IMPL")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "chunked"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Fused cells
+# ---------------------------------------------------------------------------
+
+def lstm_gates(gates: jax.Array, c_prev: jax.Array,
+               impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return cell_kernels.lstm_gates(gates, c_prev, interpret=_interpret())
+    return ref.lstm_gates(gates, c_prev)
+
+
+def lstm_level_fused(h_prev, c_prev, ext_proj, wh, b,
+                     impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """One fused batching task: h_prev @ W_h + gates + state update
+    (kernels/level_step.py — gates never round-trip HBM)."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels import level_step
+        return level_step.lstm_level_fused(h_prev, c_prev, ext_proj, wh, b,
+                                           interpret=_interpret())
+    return ref.lstm_level_fused(h_prev, c_prev, ext_proj, wh, b)
+
+
+def treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k, child_mask,
+                   impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return cell_kernels.treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k,
+                                           child_mask, interpret=_interpret())
+    return ref.treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k, child_mask)
+
+
+# ---------------------------------------------------------------------------
+# Cavs primitives
+# ---------------------------------------------------------------------------
+
+def gather_rows(src: jax.Array, idx: jax.Array, impl: str = "auto") -> jax.Array:
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return gsc.gather_rows(src, idx, interpret=_interpret())
+    return ref.gather_rows(src, idx)
+
+
+def scatter_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
+                 impl: str = "auto") -> jax.Array:
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return gsc.scatter_rows(dst, idx, rows, interpret=_interpret())
+    return ref.scatter_rows(dst, idx, rows)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, impl: str = "auto",
+              block_q: int = 512, block_k: int = 512) -> jax.Array:
+    """``[B, Hq, Sq, D] × [B, Hkv, Sk, D]² → [B, Hq, Sq, D]``."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=_interpret())
+    if impl == "chunked":
+        return fa.attention_chunked(q, k, v, causal=causal, window=window,
+                                    scale=scale, block_q=block_q,
+                                    block_k=block_k)
+    return ref.mha(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_len: Optional[jax.Array] = None,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None,
+                     impl: str = "auto") -> jax.Array:
+    """``[B, Hq, D] × [B, Hkv, S, D]² → [B, Hq, D]``."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        return dec.decode_attention(q, k, v, kv_len=kv_len, window=window,
+                                    scale=scale, interpret=_interpret())
+    if impl == "chunked":
+        return dec.decode_attention_chunked(q, k, v, kv_len=kv_len,
+                                            window=window, scale=scale)
+    return ref.decode_attention(q, k, v, kv_len=kv_len, window=window)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, D: Optional[jax.Array] = None, *,
+        chunk: int = 128, initial_state: Optional[jax.Array] = None,
+        impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Chunked state-space-dual scan; returns ``(y, final_state)``."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "ref":
+        return ref.ssd_reference(x, dt, A, B, C, D,
+                                 initial_state=initial_state)
+    L = x.shape[1]
+    c = min(chunk, L)
+    # Pad the sequence to a chunk multiple.  Padding rows carry dt = 0:
+    # decay = exp(0·A) = 1 and the input contribution dt·x⊗B = 0, so the
+    # final state is exact; padded y rows are sliced off.
+    Lp = (L + c - 1) // c * c
+    if Lp != L:
+        pad = ((0, 0), (0, Lp - L))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        B = jnp.pad(B, pad + ((0, 0),))
+        C = jnp.pad(C, pad + ((0, 0),))
+    if impl == "pallas":
+        from repro.kernels import mamba_ssd
+        y, s = mamba_ssd.ssd_chunk_scan(x, dt, A, B, C, D, chunk=c,
+                                        initial_state=initial_state,
+                                        interpret=_interpret())
+    else:
+        y, s = ref.ssd_chunked(x, dt, A, B, C, D, chunk=c,
+                               initial_state=initial_state)
+    return y[:, :L], s
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    return ref.ssd_decode_step(x, dt, A, B, C, D, state)

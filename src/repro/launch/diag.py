@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler for the §Perf hillclimb: lowers ONE cell and prints
+the top collective tensors and top HBM-traffic tensors — the napkin
+math's ground truth.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.diag --arch llama3-405b \
+        --shape train_4k [--sp 0] [--n-micro 4] [--fsdp 1] [--top 15]
+"""
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo_cost
+from repro.analysis.roofline import V5E, model_flops
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED
+from repro.configs.shapes import SHAPES
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh, mesh_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sp", type=int, default=None)
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--fsdp", type=int, default=None)
+    ap.add_argument("--expert-axis", choices=["experts", "ff"], default=None)
+    ap.add_argument("--grad-spec", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    # run_cell keeps the compiled HLO internal; re-lower here to keep it
+    import repro.launch.dryrun as dr
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    # monkeypatch-free: duplicate the relevant lowering via run_cell row
+    row = dr.run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      verbose=True, keep_artifacts=True,
+                      sp_override=None if args.sp is None else bool(args.sp),
+                      n_micro_override=args.n_micro,
+                      fsdp_override=None if args.fsdp is None
+                      else bool(args.fsdp),
+                      expert_axis_override=args.expert_axis,
+                      grad_spec=args.grad_spec)
+    if row["status"] != "ok":
+        print(row.get("traceback", row.get("error")))
+        return
+
+    cost = row["_cost"]
+    print("\n=== top collective tensors (per device, per step) ===")
+    top = sorted(cost.coll_by_shape.items(), key=lambda kv: -kv[1])
+    for (kind, dt, dims), b in top[: args.top]:
+        print(f"  {b/1e9:10.2f} GB  {kind:20s} {dt}{list(dims)}")
+    print("\n=== top HBM tensors (per device, per step) ===")
+    toph = sorted(cost.by_shape.items(), key=lambda kv: -kv[1])
+    for (dt, dims), b in toph[: args.top]:
+        print(f"  {b/1e9:10.2f} GB  {dt}{list(dims)}")
+
+    print("\n=== per-term seconds ===")
+    print(f"compute    {row['t_compute_s']:10.3f}")
+    print(f"memory     {row['t_memory_s']:10.3f}  "
+          f"(raw {row['bytes_detail'].get('bytes_measured', 0) / V5E.hbm_bw:10.3f})")
+    print(f"collective {row['t_collective_s']:10.3f}")
+    print(f"bottleneck {row['bottleneck']}  mfu_bound {row['mfu_bound']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

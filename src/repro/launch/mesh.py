@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state (device count locks on first backend init, and
+smoke tests want 1 device while the dry-run wants 512).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ``data`` carries DP/FSDP, ``model`` carries TP/EP/SP, ``pod``
+    (multi-pod) folds into DP or carries the pipeline (dist/pipeline.py).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh over however many (host) devices exist — used by
+    small-scale tests (e.g. (2, 2) over 4 forced host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Two modes:
+
+  - ``--smoke`` (CPU-friendly): train the *reduced* config of any arch
+    on a synthetic corpus for a few hundred steps — the end-to-end
+    driver deliverable (examples/train_lm.py wraps this).
+  - full config: builds the production mesh and the sharded train step;
+    on real hardware this is the job entry point (on this CPU container
+    the full configs only make sense through launch/dryrun.py).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --smoke --steps 200 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED, reduced
+from repro.data import lm_batches, synthetic_corpus
+from repro.models.transformer import TransformerLM
+from repro.train import MetricLogger, TrainConfig, Trainer
+
+
+def make_batches(cfg, batch: int, seq: int, seed: int = 0):
+    corpus = synthetic_corpus(2_000_000, cfg.vocab, seed=seed)
+    for b in lm_batches(corpus, batch, seq, seed=seed):
+        if cfg.family == "vlm":
+            b = dict(b, image_embeds=np.zeros(
+                (batch, cfg.cross_kv_len, cfg.d_model), np.float32))
+        if cfg.enc_dec:
+            b = dict(b, frame_embeds=np.zeros(
+                (batch, max(seq // 4, 16), cfg.d_model), np.float32))
+        yield b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ASSIGNED, default="stablelm-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on CPU (default on this host)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke or jax.default_backend() == "cpu":
+        cfg = reduced(cfg)
+    lm = TransformerLM(cfg)
+
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=min(50, args.steps // 4),
+                       total_steps=args.steps, n_micro=args.n_micro,
+                       ckpt_dir=args.ckpt_dir, log_every=args.log_every)
+    trainer = Trainer(lambda p, b: lm.loss(p, b), lm.init, tcfg)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, start = trainer.maybe_restore(state)
+    logger = MetricLogger(tokens_per_step=args.batch * args.seq)
+    state, logger = trainer.fit(
+        state, make_batches(cfg, args.batch, args.seq), steps=args.steps,
+        logger=logger)
+    final = logger.history[-1] if logger.history else {}
+    print(f"done: arch={cfg.name} step={int(np.asarray(state.step))} "
+          f"loss={final.get('loss', float('nan')):.4f} "
+          f"tokens/s={final.get('tokens_per_sec', 0):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Attention blocks: GQA (+SWA, biases), MLA (DeepSeek-style latent
+attention, with matrix-absorbed decode), and cross-attention.
+
+Each variant exposes ``*_init`` and a mode-polymorphic ``*_apply``:
+
+  - ``mode="train"``   : full-sequence causal attention, no cache;
+  - ``mode="prefill"`` : as train, but also returns the KV cache;
+  - ``mode="decode"``  : one new token against the cache at ``cache_pos``.
+
+KV caches are plain dict pytrees so they stack cleanly across scanned
+layer repeats and shard with the usual logical rules ("batch" on B,
+"heads"/"kv_heads" on heads, optional "seq" on S for long contexts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import (apply_rope, dense_init, shard,
+                                 shard_param)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_q: int
+    n_kv: int
+    head_dim: int
+    window: Optional[int] = None
+    rope_theta: float = 10000.0
+    bias: bool = False
+    causal: bool = True
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, dims: AttnDims, dtype=jnp.float32) -> Params:
+    """Projection weights are stored HEAD-MAJOR 3-D (``[D, n, Dh]`` /
+    ``[n, Dh, D]``) so tensor parallelism shards on whole-head
+    boundaries: when ``n_kv`` doesn't divide the model axis (GQA with
+    TP > kv heads) the spec resolver replicates K/V cleanly instead of
+    splitting heads — splitting within a head forces GSPMD into
+    "involuntary full rematerialization" replication at every
+    reshape/transpose between the projection and attention layouts."""
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    D, Dh = dims.d_model, dims.head_dim
+    scale = D ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (D, dims.n_q, Dh), jnp.float32)
+               * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (D, dims.n_kv, Dh), jnp.float32)
+               * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, (D, dims.n_kv, Dh), jnp.float32)
+               * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (dims.n_q, Dh, D), jnp.float32)
+               * (dims.n_q * Dh) ** -0.5).astype(dtype),
+    }
+    if dims.bias:
+        p["bq"] = jnp.zeros((dims.n_q, Dh), dtype)
+        p["bk"] = jnp.zeros((dims.n_kv, Dh), dtype)
+        p["bv"] = jnp.zeros((dims.n_kv, Dh), dtype)
+    return p
+
+
+def _proj_heads(x, w, b, n, dh):
+    """``x``: [B, S, D]; ``w``: [D, n, Dh] → [B, n, S, Dh]."""
+    y = jnp.einsum("bsd,dnk->bnsk", x, w)
+    if b is not None:
+        y = y + b[None, :, None, :]
+    return y
+
+
+def gqa_empty_cache(dims: AttnDims, batch: int, max_len: int,
+                    dtype=jnp.float32) -> Params:
+    shp = (batch, dims.n_kv, max_len, dims.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def gqa_apply(params: Params, x: jax.Array, positions: jax.Array, *,
+              dims: AttnDims, mode: str = "train",
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              attn_impl: str = "auto",
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """``x``: ``[B, S, D]`` (``S == 1`` for decode); ``positions``: ``[S]``
+    (train/prefill) or ``[B]`` absolute positions (decode)."""
+    Dh = dims.head_dim
+    bq, bk, bv = params.get("bq"), params.get("bk"), params.get("bv")
+    # Use-site weight constraints: fwd no-ops, but their TRANSPOSE pins
+    # the per-layer dW sharding inside the backward scan (layers.shard_param).
+    params = dict(params,
+                  wq=shard_param(params["wq"], ("fsdp", "model", None)),
+                  wk=shard_param(params["wk"], ("fsdp", "model", None)),
+                  wv=shard_param(params["wv"], ("fsdp", "model", None)),
+                  wo=shard_param(params["wo"], ("model", None, "fsdp")))
+
+    if mode in ("train", "prefill"):
+        q = _proj_heads(x, params["wq"], bq, dims.n_q, Dh)
+        k = _proj_heads(x, params["wk"], bk, dims.n_kv, Dh)
+        v = _proj_heads(x, params["wv"], bv, dims.n_kv, Dh)
+        q = apply_rope(q, positions, dims.rope_theta)
+        k = apply_rope(k, positions, dims.rope_theta)
+        q = shard(q, ("batch", "heads", "seq", None))
+        k = shard(k, ("batch", "kv_heads", "seq", None))
+        v = shard(v, ("batch", "kv_heads", "seq", None))
+        o = kops.attention(q, k, v, causal=dims.causal, window=dims.window,
+                           impl=attn_impl)
+        y = jnp.einsum("bnsk,nkd->bsd", o, params["wo"])
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+        return y, new_cache
+
+    # -- decode ----------------------------------------------------------
+    assert cache is not None and cache_pos is not None
+    B = x.shape[0]
+    xt = x[:, 0] if x.ndim == 3 else x                       # [B, D]
+    q = jnp.einsum("bd,dnk->bnk", xt, params["wq"]) \
+        + (bq[None] if bq is not None else 0.0)
+    k_new = jnp.einsum("bd,dnk->bnk", xt, params["wk"]) \
+        + (bk[None] if bk is not None else 0.0)
+    v_new = jnp.einsum("bd,dnk->bnk", xt, params["wv"]) \
+        + (bv[None] if bv is not None else 0.0)
+    q = apply_rope(q[:, :, None, :], cache_pos[:, None, None],
+                   dims.rope_theta)[:, :, 0]
+    k_new = apply_rope(k_new[:, :, None, :], cache_pos[:, None, None],
+                       dims.rope_theta)[:, :, 0]
+    # Write the new row.  SWA caches are *rolling* buffers of exactly
+    # ``window`` rows (sub-quadratic long-context memory): the write
+    # wraps, masking reduces to the valid-row count, and the per-row
+    # absolute RoPE already stored keeps scores relative-correct.
+    L = cache["k"].shape[2]
+    rolling = dims.window is not None and L <= dims.window
+    write_idx = cache_pos % L if rolling else cache_pos
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, :, write_idx].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, :, write_idx].set(v_new.astype(cache["v"].dtype))
+    kv_len = jnp.minimum(cache_pos + 1, L) if rolling else cache_pos + 1
+    o = kops.decode_attention(q, k, v, kv_len=kv_len,
+                              window=None if rolling else dims.window,
+                              impl=attn_impl)
+    y = jnp.einsum("bnk,nkd->bd", o, params["wo"])
+    return y[:, None, :], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+
+
+def mla_init(rng, dims: MLADims, dtype=jnp.float32) -> Params:
+    """Per-head weights head-major 3-D (see gqa_init) so TP shards on
+    head boundaries; the latent path (w_dkv/w_kr) is head-free."""
+    kq, kd, kr, ku, kv, ko = jax.random.split(rng, 6)
+    D, H = dims.d_model, dims.n_heads
+
+    def hd(rng, a, n, b, scale):
+        return (jax.random.normal(rng, (a, n, b), jnp.float32)
+                * scale).astype(dtype)
+
+    return {
+        "wq": hd(kq, D, H, dims.nope_dim + dims.rope_dim, D ** -0.5),
+        "w_dkv": dense_init(kd, D, dims.kv_lora, dtype),
+        "w_kr": dense_init(kr, D, dims.rope_dim, dtype),
+        "kv_norm": jnp.ones((dims.kv_lora,), dtype),
+        "w_uk": hd(ku, dims.kv_lora, H, dims.nope_dim, dims.kv_lora ** -0.5),
+        "w_uv": hd(kv, dims.kv_lora, H, dims.v_dim, dims.kv_lora ** -0.5),
+        "wo": hd(ko, H, dims.v_dim, D, (H * dims.v_dim) ** -0.5),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_empty_cache(dims: MLADims, batch: int, max_len: int,
+                    dtype=jnp.float32) -> Params:
+    """The MLA cache stores the *compressed* latent + shared rope key:
+    ``kv_lora + rope_dim`` floats per token (vs ``2·H·head_dim`` for
+    GQA) — the paper-external memory optimization MLA exists for."""
+    return {"c": jnp.zeros((batch, max_len, dims.kv_lora), dtype),
+            "kr": jnp.zeros((batch, max_len, dims.rope_dim), dtype)}
+
+
+def mla_apply(params: Params, x: jax.Array, positions: jax.Array, *,
+              dims: MLADims, mode: str = "train",
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              attn_impl: str = "auto",
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    H, dn, dr, dv = dims.n_heads, dims.nope_dim, dims.rope_dim, dims.v_dim
+    B = x.shape[0]
+    scale = (dn + dr) ** -0.5
+    params = dict(params,
+                  wq=shard_param(params["wq"], ("fsdp", "model", None)),
+                  w_dkv=shard_param(params["w_dkv"], ("fsdp", "model")),
+                  w_uk=shard_param(params["w_uk"], ("fsdp", "model", None)),
+                  w_uv=shard_param(params["w_uv"], ("fsdp", "model", None)),
+                  wo=shard_param(params["wo"], ("model", None, "fsdp")))
+
+    if mode in ("train", "prefill"):
+        S = x.shape[1]
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, positions, dims.rope_theta)
+        c = _rms(x @ params["w_dkv"], params["kv_norm"])     # [B, S, L]
+        kr = apply_rope((x @ params["w_kr"])[:, None], positions,
+                        dims.rope_theta)                     # [B, 1, S, dr]
+        k_nope = jnp.einsum("bsl,lhk->bhsk", c, params["w_uk"])
+        v = jnp.einsum("bsl,lhk->bhsk", c, params["w_uv"])
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate([k_nope, jnp.broadcast_to(
+            kr, (B, H, S, dr))], axis=-1)
+        # Pad v up to qk width so one kernel signature serves both.
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        o = kops.attention(qf, kf, vp, causal=True, scale=scale,
+                           impl=attn_impl)[..., :dv]
+        y = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+        new_cache = {"c": c, "kr": kr[:, 0]} if mode == "prefill" else None
+        return y, new_cache
+
+    # -- decode with matrix absorption ------------------------------------
+    # Scores: q_nopeᵀ·k_nope = (q_nope @ w_ukᵀ)·c  → fold w_uk into q once
+    # per step and attend directly over the latent cache (Hkv = 1).
+    assert cache is not None and cache_pos is not None
+    xt = x[:, 0] if x.ndim == 3 else x
+    L = dims.kv_lora
+    q = jnp.einsum("bd,dhk->bhk", xt, params["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope[:, :, None, :], cache_pos[:, None, None],
+                        dims.rope_theta)[:, :, 0]
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, params["w_uk"])  # [B, H, L]
+
+    c_new = _rms(xt @ params["w_dkv"], params["kv_norm"])
+    kr_new = apply_rope((xt @ params["w_kr"])[:, None, None, :],
+                        cache_pos[:, None, None], dims.rope_theta)[:, 0, 0]
+    bidx = jnp.arange(B)
+    c = cache["c"].at[bidx, cache_pos].set(c_new.astype(cache["c"].dtype))
+    kr = cache["kr"].at[bidx, cache_pos].set(kr_new.astype(cache["kr"].dtype))
+
+    qf = jnp.concatenate([q_abs, q_rope], axis=-1)            # [B, H, L+dr]
+    kf = jnp.concatenate([c, kr], axis=-1)[:, None]           # [B, 1, S, L+dr]
+    vp = jnp.pad(c[:, None], ((0, 0), (0, 0), (0, 0), (0, dr)))
+    o = kops.decode_attention(qf, kf, vp, kv_len=cache_pos + 1,
+                              scale=scale, impl=attn_impl)[..., :L]
+    yh = jnp.einsum("bhl,lhv->bhv", o, params["w_uv"])
+    y = jnp.einsum("bhv,hvd->bd", yh, params["wo"])
+    return y[:, None, :], {"c": c, "kr": kr}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder / VLM image layers)
+# ---------------------------------------------------------------------------
+
+def cross_init(rng, dims: AttnDims, kv_dim: Optional[int] = None,
+               dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    D, Dh = dims.d_model, dims.head_dim
+    kvd = kv_dim or D
+
+    def hd(rng, a, n, b, scale):
+        return (jax.random.normal(rng, (a, n, b), jnp.float32)
+                * scale).astype(dtype)
+
+    return {
+        "wq": hd(kq, D, dims.n_q, Dh, D ** -0.5),
+        "wk": hd(kk, kvd, dims.n_kv, Dh, kvd ** -0.5),
+        "wv": hd(kv, kvd, dims.n_kv, Dh, kvd ** -0.5),
+        "wo": hd(ko, dims.n_q, Dh, D, (dims.n_q * Dh) ** -0.5),
+    }
+
+
+def cross_empty_cache(dims: AttnDims, batch: int, kv_len: int,
+                      dtype=jnp.float32) -> Params:
+    shp = (batch, dims.n_kv, kv_len, dims.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def cross_apply(params: Params, x: jax.Array, kv_src: Optional[jax.Array], *,
+                dims: AttnDims, mode: str = "train",
+                cache: Optional[Params] = None,
+                attn_impl: str = "auto",
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """``x``: ``[B, S, D]`` queries; ``kv_src``: ``[B, S_kv, D_kv]``
+    (encoder states / image embeddings).  In decode mode the projected
+    encoder KV is read from ``cache`` (computed once at prefill)."""
+    Dh = dims.head_dim
+    B, S = x.shape[0], x.shape[1]
+    params = dict(params,
+                  wq=shard_param(params["wq"], ("fsdp", "model", None)),
+                  wk=shard_param(params["wk"], ("fsdp", "model", None)),
+                  wv=shard_param(params["wv"], ("fsdp", "model", None)),
+                  wo=shard_param(params["wo"], ("model", None, "fsdp")))
+    q = _proj_heads(x, params["wq"], None, dims.n_q, Dh)
+    if mode == "decode":
+        assert cache is not None
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        assert kv_src is not None
+        k = _proj_heads(kv_src, params["wk"], None, dims.n_kv, Dh)
+        v = _proj_heads(kv_src, params["wv"], None, dims.n_kv, Dh)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    o = kops.attention(q, k, v, causal=False, impl=attn_impl)
+    y = jnp.einsum("bnsk,nkd->bsd", o, params["wo"])
+    return y, new_cache

@@ -1,0 +1,236 @@
+"""Shared transformer building blocks: norms, RoPE, MLPs, embeddings,
+plus the activation-sharding hook used across the model zoo.
+
+Activation sharding: models call :func:`shard` with *logical* axis names
+("batch", "seq", "embed", "heads", "ff", "vocab", "experts").  The
+mapping logical→mesh axes is installed by ``repro.dist.sharding`` as a
+context; with no context installed (unit tests, single device) the call
+is a no-op, so model code is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+_CTX = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_CTX, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any]):
+    """Install logical→mesh axis rules (see ``repro.dist.sharding``)."""
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+
+
+def logical_spec(names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None):
+    """Resolve logical names to a PartitionSpec under the current rules.
+
+    A mesh axis may appear at most once in a spec; on conflict the FIRST
+    logical dim keeps it (e.g. with sequence parallelism on, attention
+    tensors named ("batch", "seq", "heads", ...) stay head-sharded and
+    the inner seq constraint is dropped — Megatron SP semantics: the
+    residual stream is seq-sharded *between* blocks, attention is
+    head-sharded *inside* them).
+
+    When ``shape`` is given and the rules carry mesh axis sizes (the
+    ``__sizes__`` entry installed by ``dist.sharding``), axes that do
+    not divide the dimension are dropped — the same divisibility gate
+    ``dist.sharding.resolve_spec`` applies to parameters."""
+    rules = current_rules()
+    if rules is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+    sizes = rules.get("__sizes__") or {}
+    used = set()
+    out = []
+    for i, n in enumerate(names):
+        ax = rules.get(n) if n else None
+        flat = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is None or any(a in used for a in flat if a):
+            out.append(None)
+            continue
+        if shape is not None and sizes:
+            total = 1
+            for a in flat:
+                total *= sizes.get(a, 1)
+            if total <= 1 or shape[i] % total != 0:
+                out.append(None)
+                continue
+        used.update(a for a in flat if a)
+        out.append(ax)
+    return P(*out)
+
+
+def shard(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """``with_sharding_constraint`` by logical names (no-op w/o rules)."""
+    spec = logical_spec(names, jnp.shape(x))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dp_shards() -> int:
+    """Number of data-parallel shards under the current rules (1 when no
+    rules installed).  Lets mesh-agnostic model code (MoE dispatch)
+    organize per-shard-local data structures without touching jax device
+    state."""
+    rules = current_rules()
+    if not rules:
+        return 1
+    sizes = rules.get("__sizes__") or {}
+    if not sizes:
+        return 1
+    b = rules.get("batch")
+    axes = b if isinstance(b, (tuple, list)) else (b,)
+    n = 1
+    for a in axes:
+        if a:
+            n *= sizes.get(a, 1)
+    return max(n, 1)
+
+
+def shard_param(w: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain a WEIGHT at its use site.
+
+    Placed inside the scanned layer body, this does double duty: the
+    forward constraint is a no-op (weights already arrive sharded), but
+    the TRANSPOSE of with_sharding_constraint constrains the weight's
+    COTANGENT at the same point — forcing each per-layer dW produced
+    inside the backward scan into the parameter sharding (a
+    reduce-scatter into the local shard) instead of letting GSPMD
+    accumulate full-size replicated gradients (measured 84 TB/device/
+    step of f32 all-gather+all-reduce on llama3-405b without this)."""
+    return shard(w, names)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """``x``: ``[..., S, D]`` (D even); ``positions``: ``[S]`` or
+    broadcastable to x's leading dims + [S]."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)                       # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    wg = shard_param(params["w_gate"], ("fsdp", "model"))
+    wu = shard_param(params["w_up"], ("fsdp", "model"))
+    wd = shard_param(params["w_down"], ("model", "fsdp"))
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    # Megatron-SP semantics: INSIDE the MLP the hidden is ff-sharded and
+    # seq is whole (the residual stream is seq-sharded only BETWEEN
+    # blocks).  Naming seq here would win the model axis from ff under
+    # the dedupe rule and force full-weight all-gathers — measured
+    # 28 TB/device/step on llama3-405b.
+    h = shard(h, ("batch", None, "ff"))
+    return h @ wd
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {"w_in": dense_init(k1, d_model, d_ff, dtype),
+            "b_in": jnp.zeros((d_ff,), dtype),
+            "w_out": dense_init(k2, d_ff, d_model, dtype),
+            "b_out": jnp.zeros((d_model,), dtype)}
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    h = shard(h, ("batch", None, "ff"))      # see swiglu
+    return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# LM head / loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-mean CE in f32 with optional z-loss.  ``logits``: [..., V]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    return loss, {"nll": (nll * mask).sum() / denom,
+                  "tokens": mask.sum()}

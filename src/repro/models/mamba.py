@@ -1,0 +1,163 @@
+"""Mamba-2 mixer block (SSD form) — the SSM vertex function.
+
+The SSM *is* a sequence recurrence, i.e. a chain ``(F, G)`` in Cavs
+terms; the chunked SSD execution (quadratic within chunks, linear state
+hand-off across chunks) is the level-batched schedule with chunk-sized
+tasks.  The per-chunk quadratic part runs in the Pallas kernel on TPU
+(``kernels/mamba_ssd.py``).
+
+Config follows mamba2-370m: ``d_inner = expand·d_model``, heads
+``H = d_inner / headdim``, single B/C group, depthwise conv over the
+``x``/``B``/``C`` lanes, gated RMSNorm before the output projection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, shard, shard_param
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int = 128       # N
+    headdim: int = 64        # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba_init(rng, dims: MambaDims, dtype=jnp.float32) -> Params:
+    ki, kc, ko, kd = jax.random.split(rng, 4)
+    D, Din, N, H = dims.d_model, dims.d_inner, dims.d_state, dims.n_heads
+    d_in_proj = 2 * Din + 2 * N + H          # z | x | B | C | dt
+    return {
+        "w_in": dense_init(ki, D, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(kc, (dims.d_conv, dims.conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) < 0
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm_scale": jnp.ones((Din,), dtype),
+        "w_out": dense_init(ko, Din, D, dtype),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, dims: MambaDims):
+    Din, N, H = dims.d_inner, dims.d_state, dims.n_heads
+    z = zxbcdt[..., :Din]
+    xBC = zxbcdt[..., Din : 2 * Din + 2 * N]
+    dt = zxbcdt[..., 2 * Din + 2 * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the seq axis.  ``xBC``: [B, L, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (yf * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_empty_cache(dims: MambaDims, batch: int,
+                      dtype=jnp.float32) -> Params:
+    return {
+        "conv": jnp.zeros((batch, dims.d_conv - 1, dims.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, dims.n_heads, dims.headdim, dims.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba_apply(params: Params, x: jax.Array, *, dims: MambaDims,
+                mode: str = "train", cache: Optional[Params] = None,
+                ssd_impl: str = "auto",
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """``x``: ``[B, L, D]`` (L == 1 in decode)."""
+    B = x.shape[0]
+    Din, N, H, P = dims.d_inner, dims.d_state, dims.n_heads, dims.headdim
+    params = dict(params,
+                  w_in=shard_param(params["w_in"], ("fsdp", "model")),
+                  w_out=shard_param(params["w_out"], ("model", "fsdp")))
+    A = -jnp.exp(params["A_log"])
+
+    if mode in ("train", "prefill"):
+        L = x.shape[1]
+        zxbcdt = x @ params["w_in"]
+        z, xBC, dt_raw = _split_proj(zxbcdt, dims)
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xs = xBC[..., :Din].reshape(B, L, H, P)
+        Bm = xBC[..., Din : Din + N]
+        Cm = xBC[..., Din + N :]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + params["dt_bias"])            # [B, L, H]
+        xs = shard(xs, ("batch", None, "heads", None))
+        y, s_fin = kops.ssd(xs, dt, A, Bm, Cm, params["D"],
+                            chunk=dims.chunk, impl=ssd_impl)
+        y = y.reshape(B, L, Din)
+        y = _gated_norm(y, z, params["norm_scale"])
+        out = y @ params["w_out"]
+        new_cache = None
+        if mode == "prefill":
+            conv_tail = jnp.pad(
+                xBC_raw_tail(x, params, dims),
+                ((0, 0), (max(0, dims.d_conv - 1 - L), 0), (0, 0)))
+            new_cache = {"conv": conv_tail, "ssm": s_fin}
+        return out, new_cache
+
+    # -- decode ------------------------------------------------------------
+    assert cache is not None
+    xt = x[:, 0] if x.ndim == 3 else x
+    zxbcdt = xt @ params["w_in"]
+    z, xBC_new, dt_raw = _split_proj(zxbcdt, dims)
+    # conv state: last d_conv-1 raw (pre-conv) rows.
+    conv_in = jnp.concatenate([cache["conv"], xBC_new[:, None, :]], axis=1)
+    w = params["conv_w"]
+    xBC = jax.nn.silu(
+        jnp.sum(conv_in * w[None, :, :], axis=1) + params["conv_b"])
+    xs = xBC[..., :Din].reshape(B, H, P)
+    Bm = xBC[..., Din : Din + N]
+    Cm = xBC[..., Din + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, s_new = kops.ssd_decode_step(xs, dt, A, Bm, Cm, params["D"],
+                                    cache["ssm"])
+    y = _gated_norm(y.reshape(B, Din), z, params["norm_scale"])
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"conv": conv_in[:, 1:], "ssm": s_new}
+
+
+def xBC_raw_tail(x: jax.Array, params: Params, dims: MambaDims) -> jax.Array:
+    """Last ``d_conv - 1`` pre-conv xBC rows (prefill → decode hand-off)."""
+    tail = x[:, -(dims.d_conv - 1):, :] if x.shape[1] >= dims.d_conv - 1 \
+        else x
+    zxbcdt = tail @ params["w_in"]
+    _, xBC, _ = _split_proj(zxbcdt, dims)
+    return xBC

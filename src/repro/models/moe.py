@@ -1,0 +1,178 @@
+"""Mixture-of-Experts with gather/scatter dispatch — the Cavs primitives
+at datacenter scale.
+
+Top-k routing dispatches each token to its experts through exactly the
+paper's machinery: *scatter* tokens into per-expert contiguous buffers
+(capacity-bounded, sort-based positions — no ``[T, E, C]`` one-hot), run
+the static expert function batched over each buffer, *gather* the
+results back weighted by the router.  ``expert buffers`` are the
+gather/scatter buffers of §3.3; token dropping at capacity is the MoE
+analogue of padding waste, reported via ``aux["drop_frac"]``.
+
+Sharding: expert-stacked weights ``[E, D, F]`` carry the "experts"
+logical axis (expert parallelism) when ``E`` divides the model axis, or
+the "ff" axis (tensor parallelism inside each expert) otherwise — chosen
+per config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, shard, shard_param
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+
+
+def moe_init(rng, dims: MoEDims, dtype=jnp.float32) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(rng, 5)
+    E, D, F = dims.num_experts, dims.d_model, dims.d_ff
+    p = {
+        "router": dense_init(kr, D, E, jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, D, F), jnp.float32)
+                   * D ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, D, F), jnp.float32)
+                 * D ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, F, D), jnp.float32)
+                   * F ** -0.5).astype(dtype),
+    }
+    if dims.num_shared:
+        k1, k2, k3 = jax.random.split(ks, 3)
+        Fs = dims.d_ff * dims.num_shared
+        p["shared"] = {
+            "w_gate": dense_init(k1, D, Fs, dtype),
+            "w_up": dense_init(k2, D, Fs, dtype),
+            "w_down": dense_init(k3, Fs, D, dtype),
+        }
+    return p
+
+
+def _positions_in_expert(expert_of: jax.Array, E: int) -> jax.Array:
+    """For each flat (token·choice), its arrival rank within its expert.
+
+    Sort-based (O(n log n)); the stable argsort groups assignments by
+    expert while preserving token order — the same "arrival order"
+    discipline the Cavs scheduler uses for slot assignment.
+    """
+    n = expert_of.shape[0]
+    order = jnp.argsort(expert_of, stable=True)
+    counts = jnp.bincount(expert_of, length=E)
+    starts = jnp.cumsum(counts) - counts                     # exclusive
+    ranks_sorted = jnp.arange(n) - starts[expert_of[order]]
+    pos = jnp.zeros(n, jnp.int32).at[order].set(ranks_sorted.astype(jnp.int32))
+    return pos
+
+
+def moe_apply(params: Params, x: jax.Array, dims: MoEDims, *,
+              deterministic_capacity: Optional[int] = None,
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``x``: ``[B, S, D]`` (or ``[T, D]``) → same shape + aux metrics.
+
+    **Hierarchical shard-local dispatch** (the scaling-critical design):
+    tokens are grouped by data-parallel shard ``[S, T/S, ...]`` and each
+    shard scatters into its OWN capacity buffer ``[E, C_local, D]``.
+    Scatter/gather indices are then shard-local, so GSPMD partitions
+    them along the leading batch dim instead of replicating one global
+    ``[E·C_global, D]`` buffer on every device and all-reducing it
+    (measured 65 TB/device/step of buffer traffic on mixtral-8x22b with
+    the naive global dispatch).  Cross-shard token→expert movement then
+    materializes as exactly one all-to-all on the expert dim of ``xe``
+    (the EP collective) — or none at all in TP-inside-expert mode.
+    With one shard (no mesh rules installed) this reduces to the
+    textbook single-buffer dispatch.
+    """
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    T = x2.shape[0]
+    E, K = dims.num_experts, dims.top_k
+    from repro.models.layers import dp_shards
+    S = dp_shards()
+    if T % S:
+        S = 1
+    Tl = T // S
+    C = deterministic_capacity or max(
+        1, int(Tl * K * dims.capacity_factor / E))
+
+    xs = shard(x2.reshape(S, Tl, D), ("batch", None, None))
+
+    # ---- routing (f32 for stability) ------------------------------------
+    logits = jnp.einsum("std,de->ste", xs.astype(jnp.float32),
+                        params["router"])                    # [S, Tl, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # [S, Tl, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- scatter: tokens → per-(shard, expert) buffers -------------------
+    expert_of = gate_idx.reshape(S, Tl * K)
+    pos = jax.vmap(_positions_in_expert, (0, None))(expert_of, E)
+    keep = pos < C
+    dest = jnp.where(keep, expert_of * C + pos, E * C)       # [S, Tl*K]
+    src = jnp.repeat(xs, K, axis=1)                          # [S, Tl*K, D]
+    xbuf = jnp.zeros((S, E * C + 1, D), x2.dtype)
+    # vmap (NOT advanced indexing) so the shard dim is a scatter BATCH
+    # dim — GSPMD partitions batched scatters along it; an indexed dim
+    # would be replicated on every device.
+    xbuf = jax.vmap(lambda b, d, s: b.at[d].add(s, mode="drop"))(
+        xbuf, dest, src)
+    xe = xbuf[:, : E * C].reshape(S, E, C, D)
+    # EP: constraining the expert dim here IS the all-to-all (each
+    # (shard, expert) block moves to the expert's device); in TP-inside
+    # mode "experts" resolves to None and buffers never leave the shard.
+    xe = shard(xe, ("batch", "experts", None, None))
+
+    # ---- the static expert function, batched per buffer -----------------
+    # "experts"+"ff" both map to the model axis; the dedupe rule keeps
+    # whichever the policy routes (EP vs TP-inside), and "fsdp" pins the
+    # dW reduce-scatter either way.
+    wg = shard_param(params["w_gate"], ("experts", "fsdp", "ff"))
+    wu = shard_param(params["w_up"], ("experts", "fsdp", "ff"))
+    wd = shard_param(params["w_down"], ("experts", "ff", "fsdp"))
+    h = jax.nn.silu(jnp.einsum("secd,edf->secf", xe, wg)) \
+        * jnp.einsum("secd,edf->secf", xe, wu)
+    h = shard(h, ("batch", "experts", None, "ff"))
+    ye = jnp.einsum("secf,efd->secd", h, wd)
+    ye = shard(ye, ("batch", "experts", None, None))
+
+    # ---- gather: expert outputs → tokens, router-weighted ---------------
+    ybuf = jnp.concatenate([ye.reshape(S, E * C, D),
+                            jnp.zeros((S, 1, D), ye.dtype)], axis=1)
+    rows = jax.vmap(lambda b, d: jnp.take(b, d, axis=0))(
+        ybuf, dest).reshape(S, Tl, K, D)
+    y = jnp.einsum("stkd,stk->std", rows, gate_vals.astype(rows.dtype))
+    y = y.reshape(T, D)
+
+    if dims.num_shared:
+        sp = params["shared"]
+        hs = jax.nn.silu(x2 @ shard_param(sp["w_gate"], ("fsdp", "model"))) \
+            * (x2 @ shard_param(sp["w_up"], ("fsdp", "model")))
+        y = y + hs @ shard_param(sp["w_down"], ("model", "fsdp"))
+
+    # ---- aux losses / metrics -------------------------------------------
+    # Switch-style load balance: E · Σ_e (frac tokens to e) · (mean prob e).
+    top1 = gate_idx[..., 0].reshape(-1)
+    frac = jnp.bincount(top1, length=E).astype(jnp.float32) / T
+    mean_prob = probs.reshape(-1, E).mean(0)
+    lb_loss = E * jnp.sum(frac * mean_prob)
+    z_loss = dims.router_z_loss * jnp.mean(
+        jax.scipy.special.logsumexp(logits, -1) ** 2)
+    drop_frac = 1.0 - keep.astype(jnp.float32).mean()
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": drop_frac}
+    return y.reshape(orig_shape), aux

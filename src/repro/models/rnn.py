@@ -1,0 +1,130 @@
+"""Sequence-RNN vertex functions (LSTM, GRU) — Cavs Fig. 2(b).
+
+A sequence RNN is the chain special case of ``(F, G)``: vertex ``t``
+gathers from vertex ``t-1``.  The scattered state is ``concat([c, h])``
+(LSTM) or ``h`` (GRU), exactly the paper's convention (Fig. 4 L18).
+
+Both cells declare their *eager prefix* (``W·x`` input projections) via
+``project_inputs`` so the scheduler can hoist it: one
+``[num_nodes, X] @ [X, G·H]`` matmul replaces per-level projections —
+the streaming optimization of §3.5 in its TPU-idiomatic form.
+
+``cell_impl`` selects the gate math: ``"jnp"`` (reference, XLA-fused) or
+``"pallas"`` (the fused VMEM-resident Pallas cell from
+``repro.kernels``) — the kernel-fusion axis of the Fig. 10 ablation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex import VertexIO, VertexOutput
+
+Params = Dict[str, Any]
+
+
+def _dense_init(rng, in_dim: int, out_dim: int, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMVertex:
+    """Standard LSTM cell as a vertex function (arity 1).
+
+    State layout: ``[c | h]`` (width ``2*hidden``); external: raw ``x``
+    rows of width ``input_dim`` (projected to ``4*hidden`` eagerly).
+    """
+
+    input_dim: int
+    hidden: int
+    cell_impl: str = "jnp"
+
+    arity: int = 1
+
+    @property
+    def state_dim(self) -> int:
+        return 2 * self.hidden
+
+    @property
+    def ext_dim(self) -> int:
+        return 4 * self.hidden  # post-projection width seen by apply()
+
+    def init(self, rng) -> Params:
+        kx, kh = jax.random.split(rng)
+        return {
+            "wx": _dense_init(kx, self.input_dim, 4 * self.hidden),
+            "wh": _dense_init(kh, self.hidden, 4 * self.hidden),
+            "b": jnp.zeros((4 * self.hidden,), jnp.float32),
+        }
+
+    def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
+        """Eager prefix (Cavs Def. 1): depends on no other vertex."""
+        return raw @ params["wx"]
+
+    def apply(self, params: Params, io: VertexIO) -> VertexOutput:
+        h = self.hidden
+        prev = io.gather(0)                      # [M, 2H] (zeros at t=0)
+        c_prev, h_prev = prev[:, :h], prev[:, h:]
+        if self.cell_impl == "fused":
+            # the fully-fused level step: recurrent matmul + gates in
+            # one Pallas launch (kernels/level_step.py)
+            from repro.kernels import ops as kops
+            c, hy = kops.lstm_level_fused(h_prev, c_prev, io.pull(),
+                                          params["wh"], params["b"],
+                                          impl="pallas")
+            return VertexOutput(state=jnp.concatenate([c, hy], axis=-1))
+        gates = io.pull() + h_prev @ params["wh"] + params["b"]
+        if self.cell_impl == "pallas":
+            from repro.kernels import ops as kops
+            c, hy = kops.lstm_gates(gates, c_prev)
+        else:
+            i, f, o, u = jnp.split(gates, 4, axis=-1)
+            i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+            c = f * c_prev + i * jnp.tanh(u)
+            hy = o * jnp.tanh(c)
+        return VertexOutput(state=jnp.concatenate([c, hy], axis=-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUVertex:
+    """GRU cell as a vertex function (arity 1); state = ``h``."""
+
+    input_dim: int
+    hidden: int
+
+    arity: int = 1
+
+    @property
+    def state_dim(self) -> int:
+        return self.hidden
+
+    @property
+    def ext_dim(self) -> int:
+        return 3 * self.hidden
+
+    def init(self, rng) -> Params:
+        kx, kh = jax.random.split(rng)
+        return {
+            "wx": _dense_init(kx, self.input_dim, 3 * self.hidden),
+            "wh": _dense_init(kh, self.hidden, 3 * self.hidden),
+            "b": jnp.zeros((3 * self.hidden,), jnp.float32),
+        }
+
+    def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
+        return raw @ params["wx"]
+
+    def apply(self, params: Params, io: VertexIO) -> VertexOutput:
+        h = self.hidden
+        h_prev = io.gather(0)
+        xz, xr, xn = jnp.split(io.pull(), 3, axis=-1)
+        hz, hr, hn = jnp.split(h_prev @ params["wh"] + params["b"], 3, axis=-1)
+        z = jax.nn.sigmoid(xz + hz)
+        r = jax.nn.sigmoid(xr + hr)
+        n = jnp.tanh(xn + r * hn)
+        hy = (1.0 - z) * n + z * h_prev
+        return VertexOutput(state=hy)

@@ -1,0 +1,479 @@
+"""Pattern-chain transformer LM — the arch-zoo backbone.
+
+The Cavs framing at the layer-stack level: each position of the
+repeating layer *pattern* is one static vertex function ``F`` (declared
+and compiled once), and the chain of repeats is the input graph ``G``.
+Concretely, parameters of the ``R`` repeats are **stacked** per pattern
+position and the stack is executed with one ``lax.scan`` — the compiled
+HLO is O(pattern), not O(layers), which is what keeps 126-layer dry-runs
+compiling in seconds and is the paper's "declare once" property applied
+to depth.
+
+Three modes, one code path:
+
+  - ``train``:   full-seq causal, loss over labels, remat per repeat;
+  - ``prefill``: full-seq, returns the stacked KV caches;
+  - ``decode``:  one token against the caches (scan carries the hidden
+                 state; caches ride as scan xs/ys).
+
+Families covered: dense GQA, MLA, MoE (EP/TP dispatch), Mamba-2 (SSD),
+hybrid interleaves, cross-attention layers (VLM image / enc-dec), and
+encoder-decoder stacks.  Modality frontends are stubs per the
+assignment: precomputed frame/patch embeddings arrive as inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockDesc, layer_plan
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (cross_entropy, dense_init, embed_init,
+                                 rmsnorm, rmsnorm_init, shard, shard_param)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+MOE_LB_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Dims helpers
+# ---------------------------------------------------------------------------
+
+def _attn_dims(cfg: ArchConfig, causal: bool = True) -> attn.AttnDims:
+    return attn.AttnDims(
+        d_model=cfg.d_model, n_q=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.dh, window=cfg.window, rope_theta=cfg.rope_theta,
+        bias=cfg.qkv_bias, causal=causal)
+
+
+def _mla_dims(cfg: ArchConfig) -> attn.MLADims:
+    m = cfg.mla
+    return attn.MLADims(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, kv_lora=m.kv_lora,
+        nope_dim=m.nope_dim, rope_dim=m.rope_dim, v_dim=m.v_dim,
+        rope_theta=cfg.rope_theta)
+
+
+def _mamba_dims(cfg: ArchConfig) -> mamba_mod.MambaDims:
+    m = cfg.mamba
+    return mamba_mod.MambaDims(
+        d_model=cfg.d_model, d_state=m.d_state, headdim=m.headdim,
+        expand=m.expand, d_conv=m.d_conv, chunk=m.chunk)
+
+
+def _moe_dims(cfg: ArchConfig) -> moe_mod.MoEDims:
+    m = cfg.moe
+    return moe_mod.MoEDims(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, num_experts=m.num_experts,
+        top_k=m.top_k, num_shared=m.num_shared,
+        capacity_factor=m.capacity_factor)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# One block (mixer + optional cross-attn + MLP), pre-norm residual
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg: ArchConfig, desc: BlockDesc, *,
+               causal: bool = True) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 4)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model, dt)}
+    if desc.mixer == "attn":
+        p["attn"] = attn.gqa_init(keys[0], _attn_dims(cfg, causal), dt)
+    elif desc.mixer == "mla":
+        p["mla"] = attn.mla_init(keys[0], _mla_dims(cfg), dt)
+    elif desc.mixer == "mamba":
+        p["mamba"] = mamba_mod.mamba_init(keys[0], _mamba_dims(cfg), dt)
+    if desc.cross:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = attn.cross_init(keys[1], _attn_dims(cfg, False), dtype=dt)
+        # Gated residual for cross-attn layers (llama-3.2-vision style):
+        # init 0 so a fresh model ignores the image path.
+        p["cross_gate"] = jnp.zeros((), jnp.float32)
+    if desc.mlp == "dense":
+        from repro.models.layers import swiglu_init
+        p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+        p["mlp"] = swiglu_init(keys[2], cfg.d_model, cfg.d_ff, dt)
+    elif desc.mlp == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+        p["moe"] = moe_mod.moe_init(keys[2], _moe_dims(cfg), dt)
+    return p
+
+
+def block_cache(cfg: ArchConfig, desc: BlockDesc, batch: int, max_len: int,
+                *, cross_len: int = 0, dtype=jnp.bfloat16) -> Cache:
+    """Zeroed decode cache for one block.  SWA caches are rolling
+    buffers of ``window`` rows (sub-quadratic long-context memory)."""
+    c: Cache = {}
+    if desc.mixer == "attn":
+        L = min(max_len, cfg.window) if cfg.window else max_len
+        c["attn"] = attn.gqa_empty_cache(_attn_dims(cfg), batch, L, dtype)
+    elif desc.mixer == "mla":
+        c["mla"] = attn.mla_empty_cache(_mla_dims(cfg), batch, max_len, dtype)
+    elif desc.mixer == "mamba":
+        c["mamba"] = mamba_mod.mamba_empty_cache(_mamba_dims(cfg), batch,
+                                                 dtype)
+    if desc.cross and cross_len:
+        c["cross"] = attn.cross_empty_cache(_attn_dims(cfg, False), batch,
+                                            cross_len, dtype)
+    return c
+
+
+def block_apply(params: Params, x: jax.Array, desc: BlockDesc,
+                cfg: ArchConfig, *, mode: str,
+                positions: Optional[jax.Array] = None,
+                cache: Optional[Cache] = None,
+                cache_pos: Optional[jax.Array] = None,
+                kv_src: Optional[jax.Array] = None,
+                attn_impl: str = "auto",
+                ) -> Tuple[jax.Array, Optional[Cache], Dict[str, jax.Array]]:
+    """One pre-norm block.  Returns (x, new_cache, aux)."""
+    aux: Dict[str, jax.Array] = {}
+    new_cache: Cache = {}
+    h = rmsnorm(params["norm1"], x)
+    h = shard(h, ("batch", "seq", None))
+
+    if desc.mixer == "attn":
+        y, c = attn.gqa_apply(
+            params["attn"], h, positions, dims=_attn_dims(cfg), mode=mode,
+            cache=None if cache is None else cache.get("attn"),
+            cache_pos=cache_pos, attn_impl=attn_impl)
+        if c is not None:
+            new_cache["attn"] = c
+    elif desc.mixer == "mla":
+        y, c = attn.mla_apply(
+            params["mla"], h, positions, dims=_mla_dims(cfg), mode=mode,
+            cache=None if cache is None else cache.get("mla"),
+            cache_pos=cache_pos, attn_impl=attn_impl)
+        if c is not None:
+            new_cache["mla"] = c
+    elif desc.mixer == "mamba":
+        y, c = mamba_mod.mamba_apply(
+            params["mamba"], h, dims=_mamba_dims(cfg), mode=mode,
+            cache=None if cache is None else cache.get("mamba"))
+        if c is not None:
+            new_cache["mamba"] = c
+    else:
+        raise ValueError(f"unknown mixer {desc.mixer}")
+    x = x + y
+
+    if desc.cross:
+        hc = rmsnorm(params["cross_norm"], x)
+        yc, cc = attn.cross_apply(
+            params["cross"], hc, kv_src, dims=_attn_dims(cfg, False),
+            mode=mode, cache=None if cache is None else cache.get("cross"),
+            attn_impl=attn_impl)
+        x = x + jnp.tanh(params["cross_gate"]).astype(x.dtype) * yc
+        if cc is not None and mode == "prefill":
+            new_cache["cross"] = cc
+        elif cache is not None and "cross" in cache:
+            new_cache["cross"] = cache["cross"]
+
+    if desc.mlp == "dense":
+        from repro.models.layers import swiglu
+        h2 = rmsnorm(params["norm2"], x)
+        x = x + swiglu(params["mlp"], h2)
+    elif desc.mlp == "moe":
+        h2 = rmsnorm(params["norm2"], x)
+        y2, moe_aux = moe_mod.moe_apply(params["moe"], h2, _moe_dims(cfg))
+        x = x + y2
+        aux.update(moe_aux)
+    x = shard(x, ("batch", "seq", None))
+    return x, (new_cache if new_cache else None), aux
+
+
+def _zero_aux(desc_list: List[BlockDesc]) -> Dict[str, jax.Array]:
+    """Uniform aux pytree so scan ys are shape-stable."""
+    if any(d.mlp == "moe" for d in desc_list):
+        z = jnp.zeros((), jnp.float32)
+        return {"moe_lb_loss": z, "moe_z_loss": z, "moe_drop_frac": z}
+    return {}
+
+
+def _merge_aux(target: Dict[str, jax.Array], aux: Dict[str, jax.Array]):
+    for k, v in aux.items():
+        target[k] = target.get(k, jnp.zeros((), jnp.float32)) + v
+    return target
+
+
+# ---------------------------------------------------------------------------
+# The LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    """Decoder-only (or encoder-decoder) LM over an :class:`ArchConfig`."""
+
+    cfg: ArchConfig
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def plan(self) -> Tuple[List[BlockDesc], List[BlockDesc], int]:
+        return layer_plan(self.cfg)
+
+    # -- init ----------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        prologue, pattern, repeats = self.plan
+        k_embed, k_head, k_pro, k_pat, k_enc = jax.random.split(rng, 5)
+
+        params: Params = {
+            # vocab padded to 256 so the vocab dim tiles the mesh (see
+            # ArchConfig.vocab_padded); pad rows are dead weight masked
+            # out of the loss/argmax.
+            "embed": embed_init(k_embed, cfg.vocab_padded, cfg.d_model, dt),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(k_head, cfg.vocab_padded,
+                                           cfg.d_model, dt)
+
+        params["prologue"] = [
+            block_init(k, cfg, d)
+            for k, d in zip(jax.random.split(k_pro, max(len(prologue), 1)),
+                            prologue)]
+
+        # Stack the repeats per pattern position: vmap(init) over rngs.
+        pat_params: List[Params] = []
+        for pos, desc in enumerate(pattern):
+            ks = jax.random.split(jax.random.fold_in(k_pat, pos), repeats)
+            pat_params.append(jax.vmap(
+                lambda k, d=desc: block_init(k, cfg, d))(ks))
+        params["pattern"] = pat_params
+
+        if cfg.enc_dec:
+            enc_desc = BlockDesc(mixer="attn", mlp="dense", cross=False)
+            ks = jax.random.split(k_enc, cfg.enc_layers)
+            params["encoder"] = {
+                "blocks": jax.vmap(
+                    lambda k: block_init(k, cfg, enc_desc, causal=False))(ks),
+                "final_norm": rmsnorm_init(cfg.d_model, dt),
+            }
+        return params
+
+    # -- encoder (enc-dec archs) ---------------------------------------------
+    def encode(self, params: Params, frame_embeds: jax.Array,
+               attn_impl: str = "auto") -> jax.Array:
+        """Bidirectional encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        enc_desc = BlockDesc(mixer="attn", mlp="dense", cross=False)
+        S = frame_embeds.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(x, layer_params):
+            y, _, _ = block_apply(layer_params, x, enc_desc, cfg,
+                                  mode="train", positions=pos,
+                                  attn_impl=attn_impl)
+            return y, None
+
+        body = self._maybe_remat(body)
+        x = frame_embeds.astype(_dtype(cfg.compute_dtype))
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return rmsnorm(params["encoder"]["final_norm"], x)
+
+    # -- the decoder trunk ----------------------------------------------------
+    def _maybe_remat(self, fn):
+        r = self.cfg.remat
+        if r == "none":
+            return fn
+        if r == "dots":
+            pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)     # "full": save only layer inputs
+
+    def trunk(self, params: Params, x: jax.Array, *, mode: str,
+              positions: Optional[jax.Array] = None,
+              cache: Optional[Cache] = None,
+              cache_pos: Optional[jax.Array] = None,
+              kv_src: Optional[jax.Array] = None,
+              attn_impl: str = "auto",
+              ) -> Tuple[jax.Array, Optional[Cache], Dict[str, jax.Array]]:
+        """Prologue blocks + scanned pattern repeats.
+
+        ``cache`` layout mirrors params: ``{"prologue": [...],
+        "pattern": [stacked per position, leading dim = repeats]}``.
+        """
+        cfg = self.cfg
+        prologue, pattern, repeats = self.plan
+        aux = _zero_aux(prologue + pattern)
+        collect_cache = mode in ("prefill", "decode")
+        new_cache: Cache = {"prologue": [], "pattern": []} \
+            if collect_cache else None
+
+        for i, desc in enumerate(prologue):
+            c = None if cache is None else cache["prologue"][i]
+            x, nc, a = block_apply(
+                params["prologue"][i], x, desc, cfg, mode=mode,
+                positions=positions, cache=c, cache_pos=cache_pos,
+                kv_src=kv_src, attn_impl=attn_impl)
+            _merge_aux(aux, a)
+            if collect_cache:
+                new_cache["prologue"].append(nc or {})
+
+        def body(carry, xs):
+            h = carry
+            layer_params, layer_cache = xs
+            step_aux = _zero_aux(pattern)
+            ncs = []
+            for pos, desc in enumerate(pattern):
+                c = None if layer_cache is None else layer_cache[pos]
+                h, nc, a = block_apply(
+                    layer_params[pos], h, desc, cfg, mode=mode,
+                    positions=positions, cache=c, cache_pos=cache_pos,
+                    kv_src=kv_src, attn_impl=attn_impl)
+                _merge_aux(step_aux, a)
+                ncs.append(nc or {})
+            ys = (ncs, step_aux) if collect_cache else (None, step_aux)
+            return h, ys
+
+        body = self._maybe_remat(body)
+        pat_cache = None if cache is None else cache["pattern"]
+        xs = (params["pattern"], pat_cache)
+        x, (pat_new_cache, step_auxes) = jax.lax.scan(body, x, xs)
+        for k, v in step_auxes.items():
+            aux[k] = aux.get(k, 0.0) + jnp.sum(v)
+        if collect_cache:
+            new_cache["pattern"] = pat_new_cache
+        return x, new_cache, aux
+
+    # -- heads ----------------------------------------------------------------
+    def logits(self, params: Params, x: jax.Array) -> jax.Array:
+        x = rmsnorm(params["final_norm"], x)
+        head = params["embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        head = shard_param(head, ("vocab", "fsdp"))
+        out = jnp.einsum("...d,vd->...v", x, head)
+        if self.cfg.vocab_padded != self.cfg.vocab:
+            pad_mask = jnp.arange(self.cfg.vocab_padded) >= self.cfg.vocab
+            out = jnp.where(pad_mask, jnp.asarray(-1e30, out.dtype), out)
+        return shard(out, ("batch", None, "vocab"))
+
+    def _loss_from_hidden(self, params: Params, x: jax.Array,
+                          labels: jax.Array
+                          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Token CE; chunked over seq when cfg.loss_chunk is set so the
+        ``[B, S, V]`` logits tensor never materializes whole."""
+        cfg = self.cfg
+        chunk = cfg.loss_chunk
+        if not chunk or x.shape[1] <= chunk:
+            lg = self.logits(params, x)
+            return cross_entropy(lg, labels)
+        B, S, D = x.shape
+        n = S // chunk
+        xs = (x[:, : n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1),
+              labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1))
+
+        def step(acc, inp):
+            xc, lc = inp
+            lg = self.logits(params, xc)
+            loss, m = cross_entropy(lg, lc)
+            tok = m["tokens"]
+            return (acc[0] + loss * tok, acc[1] + tok), None
+
+        (tot, tok), _ = jax.lax.scan(
+            step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            xs)
+        loss = tot / jnp.maximum(tok, 1.0)
+        return loss, {"nll": loss, "tokens": tok}
+
+    # -- full steps -----------------------------------------------------------
+    def embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        emb = shard_param(params["embed"], ("vocab", "fsdp"))
+        x = jnp.take(emb, tokens, axis=0)
+        x = x.astype(_dtype(self.cfg.compute_dtype))
+        return shard(x, ("batch", "seq", None))
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             attn_impl: str = "auto"
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Training objective for one (micro)batch.
+
+        ``batch``: tokens/labels [B, S]; + ``image_embeds`` (vlm) or
+        ``frame_embeds`` (enc-dec) frontend stubs.
+        """
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        kv_src = None
+        if cfg.enc_dec:
+            kv_src = self.encode(params, batch["frame_embeds"], attn_impl)
+        elif cfg.family == "vlm":
+            kv_src = batch["image_embeds"].astype(_dtype(cfg.compute_dtype))
+
+        x = self.embed(params, tokens)
+        x, _, aux = self.trunk(params, x, mode="train", positions=positions,
+                               kv_src=kv_src, attn_impl=attn_impl)
+        loss, metrics = self._loss_from_hidden(params, x, labels)
+        if "moe_lb_loss" in aux:
+            loss = loss + MOE_LB_COEF * aux["moe_lb_loss"] + aux["moe_z_loss"]
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, *, cross_len: int = 0,
+                   dtype=None) -> Cache:
+        cfg = self.cfg
+        dtype = dtype or _dtype(cfg.compute_dtype)
+        prologue, pattern, repeats = self.plan
+        cache: Cache = {"prologue": [
+            block_cache(cfg, d, batch, max_len, cross_len=cross_len,
+                        dtype=dtype) for d in prologue]}
+        pat = []
+        for desc in pattern:
+            one = block_cache(cfg, desc, batch, max_len, cross_len=cross_len,
+                              dtype=dtype)
+            pat.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), one))
+        cache["pattern"] = pat
+        return cache
+
+    def prefill(self, params: Params, tokens: jax.Array, *,
+                frontend: Optional[jax.Array] = None,
+                attn_impl: str = "auto",
+                ) -> Tuple[jax.Array, Cache]:
+        """Full-sequence pass building the cache; returns last-position
+        logits + the stacked cache."""
+        cfg = self.cfg
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        kv_src = None
+        if cfg.enc_dec:
+            kv_src = self.encode(params, frontend, attn_impl)
+        elif cfg.family == "vlm":
+            kv_src = frontend.astype(_dtype(cfg.compute_dtype))
+        x = self.embed(params, tokens)
+        x, cache, _ = self.trunk(params, x, mode="prefill",
+                                 positions=positions, kv_src=kv_src,
+                                 attn_impl=attn_impl)
+        lg = self.logits(params, x[:, -1:, :])
+        return lg[:, 0], cache
+
+    def decode_step(self, params: Params, cache: Cache, tokens: jax.Array,
+                    positions: jax.Array, *, attn_impl: str = "auto",
+                    ) -> Tuple[jax.Array, Cache]:
+        """One new token per sequence.  ``tokens``: [B, 1]; ``positions``:
+        [B] absolute positions (= current cache fill)."""
+        x = self.embed(params, tokens)
+        x, new_cache, _ = self.trunk(params, x, mode="decode",
+                                     positions=None, cache=cache,
+                                     cache_pos=positions,
+                                     attn_impl=attn_impl)
+        lg = self.logits(params, x)
+        return lg[:, 0], new_cache

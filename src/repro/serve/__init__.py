@@ -1,0 +1,6 @@
+"""Serving substrate: slot-based KV cache + continuous-batching engine."""
+
+from repro.serve.kv_cache import CacheSlots
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["CacheSlots", "Request", "ServeEngine"]

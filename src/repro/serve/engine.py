@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine.
+
+The serving analogue of the Cavs batching policy: the *program* (one
+jitted ``decode_step`` over the slot pool) is static; the *occupancy*
+(which slots hold live requests, each at its own position) is dynamic
+data.  Each engine tick:
+
+  1. admit queued requests into free slots (prefill one sequence,
+     ``dynamic_update_slice`` it into the pool — the ``scatter``);
+  2. run one batched decode step over ALL slots (inactive slots compute
+     garbage that is ignored — padding waste, exactly the paper's
+     trade-off, bounded by the admission policy);
+  3. sample/argmax next tokens, detect EOS/length-stop, retire finished
+     slots (the ``gather`` of results).
+
+This mirrors the Var-LSTM experiment (§5.1): variable-length sequences
+batched without recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kv_cache import CacheSlots
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray               # [prompt_len] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # -- filled by the engine ------------------------------------------
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-pool continuous batching over a ``TransformerLM``-style model.
+
+    ``model`` must expose ``prefill(params, tokens, frontend=None)`` →
+    ``(last_logits, cache)`` and ``decode_step(params, cache, tokens,
+    positions)`` → ``(logits, cache)`` plus ``init_cache``.
+    """
+
+    def __init__(self, model, params: Params, *, num_slots: int,
+                 max_len: int, cross_len: int = 0,
+                 greedy: bool = True, rng: Optional[jax.Array] = None,
+                 pad_prompts: bool = True):
+        #: prompt-length bucketing is exact for attention caches (masked
+        #: by kv_len) but NOT for SSM states (pads roll into the state);
+        #: engines over SSM/hybrid archs must pass ``pad_prompts=False``.
+        self.pad_prompts = pad_prompts
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cache = model.init_cache(num_slots, max_len, cross_len=cross_len)
+        self.slots = CacheSlots.create(cache, num_slots)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._last_token = np.zeros(num_slots, np.int32)
+        # jit once; shapes never change across ticks (the Cavs property).
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self.ticks = 0
+        self._live_requests: Dict[int, Request] = {}
+
+    # -- ingress ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # -- one engine tick -------------------------------------------------------
+    def step(self) -> int:
+        """Admit + decode one token for all active slots.  Returns the
+        number of live requests after the tick."""
+        self._admit()
+        if self.slots.num_active == 0:
+            return 0
+        # .copy(): _last_token is mutated in place after this tick, and
+        # jnp.asarray of numpy is zero-copy on CPU (aliasing + async
+        # dispatch = race).  positions_device() copies likewise.
+        tokens = jnp.asarray(self._last_token.copy())[:, None]
+        positions = self.slots.positions_device()
+        logits, new_cache = self._decode(self.params, self.slots.cache,
+                                         tokens, positions)
+        self.slots.cache = new_cache
+        next_tok = self._sample(logits)
+        self.slots.advance()
+        self.ticks += 1
+
+        next_np = np.asarray(next_tok)
+        for slot in range(self.num_slots):
+            if not self.slots.active[slot]:
+                continue
+            rid = self.slots.request_of[slot]
+            req = self._req_by_id(rid)
+            tok = int(next_np[slot])
+            req.output.append(tok)
+            self._last_token[slot] = tok
+            stop = (req.eos_id is not None and tok == req.eos_id) or \
+                len(req.output) >= req.max_new_tokens or \
+                int(self.slots.positions[slot]) >= self.max_len
+            if stop:
+                req.done = True
+                self.finished.append(req)
+                self.slots.retire(slot)
+        return self.slots.num_active + len(self.queue)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drain the queue; returns finished requests."""
+        for _ in range(max_ticks):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.finished
+
+    # -- internals ------------------------------------------------------------
+    def _admit(self) -> None:
+        free = self.slots.free_slots()
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            # Bucket the prompt length to a power of two: one compiled
+            # prefill program per bucket, not per length (the
+            # recompilation cost Cavs exists to avoid).  The pad is on
+            # the *right*; we prefill only the first ``plen - 1`` real
+            # tokens' effects by admitting with ``prompt_len = plen - 1``
+            # and replaying the last prompt token through the decode
+            # step — its fresh K/V overwrites the first pad row, and
+            # ``kv_len`` masking hides the rest, so attention is exact.
+            plen = len(req.prompt)
+            prompt = np.asarray(req.prompt, np.int32)
+            bucket = max(8, 1 << (plen - 1).bit_length()) \
+                if self.pad_prompts else plen
+            padded = np.concatenate(
+                [prompt, np.zeros(bucket - plen, np.int32)])
+            logits, cache1 = self._prefill(self.params,
+                                           jnp.asarray(padded)[None, :])
+            if bucket == plen:
+                # Exact prompt (pad_prompts=False, required for SSM
+                # state exactness): the prefilled cache/state already
+                # includes the last token; take the first output token
+                # from the prefill logits directly.
+                self.slots.admit(slot, req.request_id, cache1,
+                                 prompt_len=plen)
+                tok = int(np.asarray(self._sample(logits[None]
+                                                  if logits.ndim == 1
+                                                  else logits))[0])
+                req.output.append(tok)
+                self._last_token[slot] = tok
+            else:
+                # Padded prompt: prefill's last position is a pad, so
+                # admit at plen-1 and REPLAY the final prompt token
+                # through the decode step — its fresh K/V overwrites the
+                # first pad row and kv_len masking hides the rest.
+                self.slots.admit(slot, req.request_id, cache1,
+                                 prompt_len=plen - 1)
+                self._last_token[slot] = int(prompt[-1])
+            self._live_requests[req.request_id] = req
+
+    def _req_by_id(self, rid: int) -> Request:
+        return self._live_requests[rid]
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)

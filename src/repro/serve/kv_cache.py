@@ -1,0 +1,115 @@
+"""Slot-based KV-cache management for continuous batching.
+
+The engine owns one *batched* cache pytree (as produced by
+``TransformerLM.init_cache``) whose leading batch dimension is a pool of
+``num_slots`` sequence slots.  Requests are admitted into free slots and
+retired out of them; the compiled decode step never changes shape — the
+exact Cavs property (static program, dynamic occupancy) applied to
+serving.  Per-slot fill levels ride along as a ``positions`` vector; the
+decode kernels mask by ``kv_len`` so dead/fresh slots never contaminate
+attention (see ``kernels/decode_attention.py``).
+
+Slot writes (admitting a prefilled request) are functional
+``dynamic_update_slice`` per cache leaf on the batch axis — under pjit
+these update only the shard that owns the slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Cache = Any
+
+
+@dataclasses.dataclass
+class CacheSlots:
+    """Host-side occupancy bookkeeping over a device cache pytree."""
+
+    cache: Cache                     # batched pytree, leading dim = slots
+    num_slots: int
+    positions: np.ndarray            # [slots] int32 fill level (0 = empty)
+    active: np.ndarray               # [slots] bool
+    request_of: List[Optional[int]]  # slot -> request id
+
+    @classmethod
+    def create(cls, cache: Cache, num_slots: int) -> "CacheSlots":
+        return cls(cache=cache, num_slots=num_slots,
+                   positions=np.zeros(num_slots, np.int32),
+                   active=np.zeros(num_slots, bool),
+                   request_of=[None] * num_slots)
+
+    # -- occupancy ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.num_slots) if not self.active[i]]
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    # -- admit / retire ------------------------------------------------------
+    def admit(self, slot: int, request_id: int, prefill_cache: Cache,
+              prompt_len: int) -> None:
+        """Copy a single-sequence prefilled cache into ``slot``."""
+        def write(pool, one):
+            # pool: [slots, ...]; one: [1, ...] (or [R, 1, ...] for
+            # scan-stacked pattern caches).  The slot axis is identified
+            # STRUCTURALLY — pool dim == num_slots where the prefill
+            # cache dim == 1 — because sizes alone are ambiguous (a
+            # 4-layer stack looks like a 4-slot pool).
+            axis = _slot_axis(pool.shape, one.shape, self.num_slots)
+            idx = [0] * pool.ndim
+            idx[axis] = slot
+            # Pad/crop the prefill cache along non-slot axes to pool dims
+            # (prompt shorter than max_len).
+            one = _fit_like(one, pool.shape, axis)
+            return jax.lax.dynamic_update_slice(pool, one.astype(pool.dtype),
+                                                tuple(idx))
+
+        self.cache = jax.tree.map(write, self.cache, prefill_cache)
+        self.positions[slot] = prompt_len
+        self.active[slot] = True
+        self.request_of[slot] = request_id
+
+    def retire(self, slot: int) -> None:
+        self.active[slot] = False
+        self.positions[slot] = 0
+        self.request_of[slot] = None
+
+    def advance(self) -> None:
+        """All active slots consumed one decode step."""
+        self.positions[self.active] += 1
+
+    def positions_device(self) -> jax.Array:
+        # COPY before handing to jax: on CPU, jnp.asarray of an aligned
+        # numpy array is zero-copy, and this array is mutated in place
+        # between ticks (advance/admit/retire) — aliasing it into an
+        # asynchronously-dispatched computation is a data race.
+        return jnp.asarray(self.positions.copy())
+
+    def active_mask_device(self) -> jax.Array:
+        return jnp.asarray(self.active.copy())
+
+
+def _slot_axis(pool_shape, one_shape, num_slots: int) -> int:
+    for i, (p, o) in enumerate(zip(pool_shape, one_shape)):
+        if p == num_slots and o == 1:
+            return i
+    raise ValueError(f"no slot axis: pool {pool_shape} vs one {one_shape}, "
+                     f"num_slots={num_slots}")
+
+
+def _fit_like(one: jax.Array, pool_shape, slot_axis: int) -> jax.Array:
+    """Pad ``one`` with zeros so every non-slot dim matches the pool
+    (slot dim stays 1)."""
+    pads = []
+    for i, (a, b) in enumerate(zip(one.shape, pool_shape)):
+        if i == slot_axis:
+            pads.append((0, 0))
+        else:
+            pads.append((0, b - a))
+    return jnp.pad(one, pads)

@@ -1,0 +1,6 @@
+"""Training substrate: the fault-tolerant distributed trainer."""
+
+from repro.train.trainer import TrainConfig, Trainer, TrainState
+from repro.train.metrics import MetricLogger
+
+__all__ = ["TrainConfig", "Trainer", "TrainState", "MetricLogger"]

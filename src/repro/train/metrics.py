@@ -1,0 +1,54 @@
+"""Scalar metric accounting for the training loop."""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+class MetricLogger:
+    """Running windows of scalar metrics + throughput accounting."""
+
+    def __init__(self, window: int = 50, tokens_per_step: int = 0,
+                 log_fn=print):
+        self.window = window
+        self.tokens_per_step = tokens_per_step
+        self.log_fn = log_fn
+        self._hist: Dict[str, collections.deque] = collections.defaultdict(
+            lambda: collections.deque(maxlen=window))
+        self._t_last: Optional[float] = None
+        self._step_times: collections.deque = collections.deque(maxlen=window)
+        self.history: List[Dict[str, float]] = []
+
+    def step(self, step: int, metrics: Dict[str, Any]) -> Dict[str, float]:
+        now = time.perf_counter()
+        if self._t_last is not None:
+            self._step_times.append(now - self._t_last)
+        self._t_last = now
+        row = {"step": float(step)}
+        for k, v in metrics.items():
+            val = float(np.asarray(v))
+            self._hist[k].append(val)
+            row[k] = val
+        if self._step_times:
+            dt = float(np.mean(self._step_times))
+            row["sec_per_step"] = dt
+            if self.tokens_per_step:
+                row["tokens_per_sec"] = self.tokens_per_step / dt
+        self.history.append(row)
+        return row
+
+    def mean(self, key: str) -> float:
+        h = self._hist.get(key)
+        return float(np.mean(h)) if h else float("nan")
+
+    def log(self, step: int, metrics: Dict[str, Any]) -> None:
+        row = self.step(step, metrics)
+        parts = [f"step {step}"]
+        for k, v in row.items():
+            if k != "step":
+                parts.append(f"{k}={v:.4g}")
+        self.log_fn("  ".join(parts))

@@ -1,0 +1,283 @@
+"""The distributed trainer: pjit'd train step, accumulation, checkpoints,
+failure recovery.
+
+One class owns the full loop a 1000-node job runs:
+
+  - builds the jitted ``train_step`` with explicit in/out shardings
+    (params per ``dist.sharding.param_specs``, batch over the DP axes,
+    optimizer state congruent with params);
+  - microbatch gradient accumulation (``optim.accum``) with the data
+    collective amortized across microbatches;
+  - optional int8+error-feedback gradient compression on the cross-pod
+    reduction (``dist.compress``) — the slow-link optimization;
+  - async keep-k checkpoints (``checkpoint.manager``) and auto-resume
+    (crash → restart → ``maybe_restore`` → identical trajectory,
+    verified by tests);
+  - failure injection hooks (``dist.fault``) so the recovery path is
+    exercised in CI, not just documented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.dist import sharding as shd
+from repro.models.layers import axis_rules
+from repro.optim import (OptState, adamw_init, adamw_update, microbatch_grads,
+                         warmup_cosine)
+from repro.train.metrics import MetricLogger
+
+Params = Any
+Batch = Dict[str, jax.Array]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Params
+    opt: OptState
+
+    @property
+    def step(self) -> jax.Array:
+        return self.opt.step
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    n_micro: int = 1                  # gradient-accumulation microbatches
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    log_every: int = 10
+    compress_grads: bool = False      # int8+EF on the DP reduction
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable[[Params, Batch], Tuple[jax.Array, Dict]],
+                 init_params_fn: Callable[[jax.Array], Params],
+                 cfg: TrainConfig, *,
+                 mesh: Optional[Mesh] = None,
+                 policy: Optional[shd.ShardingPolicy] = None):
+        self.loss_fn = loss_fn
+        self.init_params_fn = init_params_fn
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy or (shd.policy_for_mesh(mesh) if mesh else None)
+        self.schedule = warmup_cosine(cfg.lr, cfg.warmup_steps,
+                                      cfg.total_steps)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep,
+                                       save_interval_steps=cfg.ckpt_every)
+                     if cfg.ckpt_dir else None)
+        self._train_step = None
+        self._ef_state = None            # error-feedback residual (pytree)
+
+    # ------------------------------------------------------------------
+    # State init / restore
+    # ------------------------------------------------------------------
+    def init_state(self, rng: jax.Array) -> TrainState:
+        if self.mesh is not None:
+            specs = None
+
+            def make():
+                p = self.init_params_fn(rng)
+                return TrainState(params=p, opt=adamw_init(p))
+
+            abstract = jax.eval_shape(make)
+            specs = self._state_specs(abstract)
+            with self.mesh:
+                state = jax.jit(make, out_shardings=shd.shardings_for(
+                    abstract, specs, self.mesh))()
+            return state
+        p = self.init_params_fn(rng)
+        return TrainState(params=p, opt=adamw_init(p))
+
+    def _state_specs(self, abstract_state) -> Any:
+        pspecs = shd.param_specs(abstract_state.params, self.mesh,
+                                 self.policy)
+        return TrainState(
+            params=pspecs,
+            opt=OptState(step=P(), mu=pspecs, nu=pspecs))
+
+    def maybe_restore(self, state: TrainState) -> Tuple[TrainState, int]:
+        """Resume from the newest committed checkpoint, resharding onto
+        the current mesh (elastic restart)."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return state, 0
+        sharding_fn = None
+        if self.mesh is not None:
+            specs = self._state_specs(jax.eval_shape(lambda: state))
+            flat_specs = dict(_flatten(specs))
+
+            def sharding_fn(key, leaf, _m=self.mesh, _f=flat_specs):
+                spec = _f.get(key, P())
+                return NamedSharding(_m, spec)
+
+        restored, step = self.ckpt.restore(state, sharding_fn=sharding_fn)
+        return restored, step
+
+    # ------------------------------------------------------------------
+    # The jitted step
+    # ------------------------------------------------------------------
+    def _build_step(self, example_batch: Batch):
+        cfg = self.cfg
+
+        grad_specs = None
+        if self.mesh is not None:
+            abstract_p = jax.eval_shape(
+                lambda: self.init_params_fn(jax.random.PRNGKey(0)))
+            grad_specs = shd.param_specs(abstract_p, self.mesh, self.policy)
+
+        def step_fn(state: TrainState, batch: Batch
+                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+            rules = self.policy.rules(self.mesh) if self.policy else None
+
+            def run():
+                loss, grads, metrics = microbatch_grads(
+                    self.loss_fn, state.params, batch, cfg.n_micro,
+                    grad_specs=grad_specs)
+                if cfg.compress_grads:
+                    from repro.dist.compress import compress_tree
+                    grads = compress_tree(grads)    # quantize→dequantize
+                lr = self.schedule(state.opt.step)
+                new_params, new_opt, opt_metrics = adamw_update(
+                    state.params, grads, state.opt, lr=lr, b1=cfg.b1,
+                    b2=cfg.b2, weight_decay=cfg.weight_decay,
+                    max_grad_norm=cfg.max_grad_norm)
+                metrics = dict(metrics)
+                metrics.update(opt_metrics)
+                metrics["loss"] = loss
+                return TrainState(params=new_params, opt=new_opt), metrics
+
+            if rules is not None:
+                with axis_rules(rules):
+                    return run()
+            return run()
+
+        if self.mesh is None:
+            return jax.jit(step_fn, donate_argnums=(0,))
+
+        abstract_state = jax.eval_shape(
+            lambda: TrainState(params=self.init_params_fn(
+                jax.random.PRNGKey(0)), opt=adamw_init(
+                    self.init_params_fn(jax.random.PRNGKey(0)))))
+        state_specs = self._state_specs(abstract_state)
+        batch_specs = shd.batch_specs(
+            self.policy, self.mesh,
+            {k: v.shape for k, v in example_batch.items()})
+        state_sh = shd.shardings_for(abstract_state, state_specs, self.mesh)
+        batch_sh = {k: NamedSharding(self.mesh, s)
+                    for k, s in batch_specs.items()}
+        return jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # The loop
+    # ------------------------------------------------------------------
+    def fit(self, state: TrainState, batches: Iterator[Batch], *,
+            steps: Optional[int] = None,
+            logger: Optional[MetricLogger] = None,
+            fault_injector=None) -> Tuple[TrainState, MetricLogger]:
+        """Run ``steps`` optimizer steps (or cfg.total_steps).
+
+        ``fault_injector`` (``dist.fault.FaultInjector``) may raise a
+        simulated node failure; the loop recovers by restoring the last
+        committed checkpoint — the 1000-node restart policy in
+
+        miniature.
+        """
+        cfg = self.cfg
+        steps = steps if steps is not None else cfg.total_steps
+        logger = logger or MetricLogger()
+        start = int(np.asarray(state.step))
+
+        ctx = self.mesh if self.mesh is not None else _nullctx()
+        with ctx:
+            if self._train_step is None:
+                first = next(batches)
+                self._train_step = self._build_step(first)
+                batches = _chain_first(first, batches)
+
+            done = start
+            while done < steps:
+                batch = next(batches)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                try:
+                    if fault_injector is not None:
+                        fault_injector.tick(done)
+                    state, metrics = self._train_step(state, batch)
+                except _FAULTS as e:
+                    if self.ckpt is None:
+                        raise
+                    # Node failure: restore last commit and continue.
+                    self.ckpt.wait()
+                    # state was donated — rebuild an abstract twin to
+                    # restore into.
+                    abstract = jax.eval_shape(
+                        lambda: TrainState(
+                            params=self.init_params_fn(jax.random.PRNGKey(0)),
+                            opt=adamw_init(self.init_params_fn(
+                                jax.random.PRNGKey(0)))))
+                    zeros = jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), abstract)
+                    state, done = self.maybe_restore(zeros)
+                    continue
+                done += 1
+                if done % cfg.log_every == 0 or done == steps:
+                    logger.log(done, metrics)
+                if self.ckpt is not None and self.ckpt.should_save(done):
+                    self.ckpt.save(state, done)
+            if self.ckpt is not None:
+                self.ckpt.save(state, done, blocking=True)
+        return state, logger
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def _chain_first(first, rest):
+    yield first
+    yield from rest
+
+
+def _flatten(tree, prefix=()):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, P))
+    for path, leaf in flat:
+        key = "/".join(_pstr(p) for p in path)
+        yield key, leaf
+
+
+def _pstr(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+from repro.dist.fault import SimulatedFailure  # noqa: E402 (cycle-free)
+
+_FAULTS = (SimulatedFailure,)

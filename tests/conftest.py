@@ -1,0 +1,10 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests run on ONE
+device; multi-device tests spawn subprocesses (see util_subproc)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

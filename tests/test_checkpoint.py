@@ -1,0 +1,120 @@
+"""Checkpoint manager: atomicity, keep-k, async, bf16 round-trip,
+restore-into-structure."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint.manager import latest_step
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                       "c": [jnp.zeros((2, 2), jnp.int32),
+                             jnp.full((1,), 7.0)]}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_tree(t, str(tmp_path), step=3)
+    like = jax.tree.map(jnp.zeros_like, t)
+    restored, step = restore_tree(str(tmp_path), like)
+    assert step == 3
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), t, restored)
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_atomicity_tmp_ignored(tmp_path):
+    t = tree()
+    save_tree(t, str(tmp_path), step=1)
+    # simulate a crash mid-save: a stale .tmp dir
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+    cm = CheckpointManager(str(tmp_path))      # purges tmp on startup
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_keep_k(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, save_interval_steps=1)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        cm.save(t, s, blocking=True)
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_async_save_then_restore(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    t = tree()
+    cm.save(t, 10, blocking=False)
+    cm.wait()
+    restored, step = cm.restore(jax.tree.map(jnp.zeros_like, t))
+    assert step == 10
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_tree({"a": jnp.ones((2, 2))}, str(tmp_path), step=1)
+    with pytest.raises(ValueError):
+        restore_tree(str(tmp_path), {"a": jnp.ones((3, 3))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_tree({"a": jnp.ones((2,))}, str(tmp_path), step=1)
+    with pytest.raises(KeyError):
+        restore_tree(str(tmp_path), {"a": jnp.ones((2,)),
+                                     "b": jnp.ones((2,))})
+
+
+def test_restore_picks_latest(tmp_path):
+    save_tree({"a": jnp.zeros((2,))}, str(tmp_path), step=1)
+    save_tree({"a": jnp.ones((2,))}, str(tmp_path), step=5)
+    restored, step = restore_tree(str(tmp_path), {"a": jnp.zeros((2,))})
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(2))
+
+
+def test_should_save_interval(tmp_path):
+    cm = CheckpointManager(str(tmp_path), save_interval_steps=50)
+    assert not cm.should_save(0)
+    assert cm.should_save(50)
+    assert not cm.should_save(51)
+
+
+def test_restore_reshards_to_different_mesh(tmp_path):
+    """DESIGN.md §7.5: save on one mesh, restore onto a DIFFERENT mesh
+    (elastic down/up-scale) — values lossless, new shardings applied."""
+    from tests.util_subproc import run_with_devices
+    run_with_devices(f"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+
+tree = {{"w": jnp.arange(64.0).reshape(8, 8),
+        "b": jnp.arange(8.0)}}
+
+# save from a 4-way data mesh
+mesh_a = Mesh(np.asarray(jax.devices()).reshape(4), ("data",))
+sharded = jax.device_put(tree, NamedSharding(mesh_a, P("data")))
+cm = CheckpointManager(r"{tmp_path}", keep=2)
+cm.save(sharded, 7, blocking=True)
+
+# restore onto a 2x2 (data, model) mesh with a different layout
+mesh_b = Mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
+like = jax.tree.map(jnp.zeros_like, tree)
+restored, step = cm.restore(
+    like, sharding_fn=lambda key, leaf:
+        NamedSharding(mesh_b, P("data", "model") if leaf.ndim == 2 else P()))
+assert step == 7
+jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+    np.asarray(a), np.asarray(b)), tree, restored)
+sh = restored["w"].sharding
+assert sh.mesh.shape == {{"data": 2, "model": 2}}, sh
+print("RESHARD_OK")
+""", n_devices=4)

@@ -1,0 +1,120 @@
+"""MoE dispatch correctness: the gather/scatter expert dispatch must be
+exact vs a dense per-token reference when capacity is ample, and report
+honest drop statistics when it is not."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEDims, _positions_in_expert, moe_apply, moe_init
+
+
+def dense_reference(params, x, dims):
+    """Per-token loop: every token through its top-k experts (no
+    capacity)."""
+    T, D = x.shape
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, dims.top_k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    out = np.zeros((T, D), np.float32)
+    for t in range(T):
+        for j in range(dims.top_k):
+            e = int(idx[t, j])
+            h = jax.nn.silu(x[t] @ params["w_gate"][e]) * \
+                (x[t] @ params["w_up"][e])
+            out[t] += float(vals[t, j]) * np.asarray(h @ params["w_down"][e])
+    if dims.num_shared:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        out += np.asarray(hs @ sp["w_down"])
+    return out
+
+
+def test_positions_in_expert():
+    e = jnp.asarray([1, 0, 1, 1, 0, 2], jnp.int32)
+    pos = np.asarray(_positions_in_expert(e, 3))
+    # arrival ranks per expert, in token order
+    np.testing.assert_array_equal(pos, [0, 0, 1, 2, 1, 0])
+
+
+def test_dispatch_exact_when_capacity_ample():
+    dims = MoEDims(d_model=8, d_ff=16, num_experts=4, top_k=2)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 8))
+    y, aux = moe_apply(params, x, dims, deterministic_capacity=32)
+    assert float(aux["moe_drop_frac"]) == 0.0
+    ref = dense_reference(params, x, dims)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_shared_experts_added():
+    dims = MoEDims(d_model=8, d_ff=16, num_experts=4, top_k=2, num_shared=1)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 8))
+    y, _ = moe_apply(params, x, dims, deterministic_capacity=32)
+    ref = dense_reference(params, x, dims)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_are_counted():
+    dims = MoEDims(d_model=8, d_ff=16, num_experts=2, top_k=1)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    x = jnp.broadcast_to(jax.random.normal(jax.random.PRNGKey(2), (1, 8)),
+                         (32, 8))               # all tokens → same expert
+    y, aux = moe_apply(params, x, dims, deterministic_capacity=4)
+    assert float(aux["moe_drop_frac"]) > 0.5
+    # dropped tokens produce zero routed output (plus shared if any)
+    assert np.count_nonzero(np.abs(np.asarray(y)).sum(-1) < 1e-6) >= 28 - 4
+
+
+def test_lb_loss_uniform_router_is_one():
+    """Switch LB loss equals 1 under a perfectly uniform router."""
+    dims = MoEDims(d_model=4, d_ff=8, num_experts=4, top_k=1)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    params = dict(params, router=jnp.zeros((4, 4)))   # uniform logits
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 4))
+    _, aux = moe_apply(params, x, dims)
+    # mean_prob = 1/E exactly; top-1 ties broken arbitrarily but frac sums
+    # to 1 → lb = E · Σ frac_e / E = 1.
+    np.testing.assert_allclose(float(aux["moe_lb_loss"]), 1.0, rtol=1e-5)
+
+
+def test_moe_differentiable():
+    dims = MoEDims(d_model=8, d_ff=16, num_experts=4, top_k=2)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 8))
+
+    def loss(p):
+        y, aux = moe_apply(p, x, dims, deterministic_capacity=32)
+        return jnp.sum(y ** 2) + aux["moe_lb_loss"]
+
+    g = jax.grad(loss)(params)
+    assert all(np.all(np.isfinite(np.asarray(v, np.float32)))
+               for v in jax.tree.leaves(g))
+    # router must receive gradient through gate values AND lb loss
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_shard_local_dispatch_matches_global():
+    """The hierarchical (per-DP-shard) dispatch must be numerically
+    identical to the single-buffer path when capacity is ample — the
+    §Perf optimization is a pure data-layout change."""
+    from repro.models.layers import axis_rules
+
+    dims = MoEDims(d_model=8, d_ff=16, num_experts=4, top_k=2)
+    params = moe_init(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 8))
+    y1, aux1 = moe_apply(params, x, dims, deterministic_capacity=32)
+    # fake a 4-shard DP layout via the rules context; the real mesh is
+    # 1×1 (single device) so every constraint is a no-op, but the S=4
+    # data path is fully exercised
+    rules = {"batch": "data", "__sizes__": {"data": 4, "model": 1}}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh, axis_rules(rules):
+        y4, aux4 = moe_apply(params, x, dims, deterministic_capacity=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux1["moe_lb_loss"]),
+                               float(aux4["moe_lb_loss"]), rtol=1e-5)

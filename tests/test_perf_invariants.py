@@ -1,0 +1,118 @@
+"""Regression tests pinning the §Perf findings (EXPERIMENTS.md §4 /
+DESIGN.md §8) — each of these encodes a multi-TB/step failure mode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED, reduced
+from repro.models.layers import axis_rules, logical_spec
+from repro.models.transformer import TransformerLM
+
+
+def test_vocab_padding_alignment():
+    """I9: every arch's padded vocab tiles a 16-way mesh axis."""
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab
+        assert cfg.vocab_padded - cfg.vocab < 256
+
+
+def test_pad_logits_masked_everywhere():
+    """Pad-vocab logits must be -inf: never sampled, excluded by CE."""
+    cfg = dataclasses.replace(reduced(get_config("seamless-m4t-large-v2")),
+                              vocab=500)     # 500 → padded 512
+    assert cfg.vocab_padded == 512
+    lm = TransformerLM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 4), jnp.int32)
+    fe = jnp.zeros((1, 8, cfg.d_model), jnp.float32)
+    x = lm.embed(params, toks)
+    h, _, _ = lm.trunk(params, x, mode="train",
+                       positions=jnp.arange(4, dtype=jnp.int32),
+                       kv_src=lm.encode(params, fe))
+    lg = np.asarray(lm.logits(params, h), np.float32)
+    assert lg.shape[-1] == 512
+    assert np.all(lg[..., 500:] < -1e20)           # masked
+    assert np.all(np.argmax(lg, -1) < 500)          # never sampled
+    loss, _ = lm.loss(params, {"tokens": toks, "labels": toks,
+                               "frame_embeds": fe})
+    assert np.isfinite(float(loss))
+    # CE ≈ log(REAL vocab): pad logits contribute nothing to the lse
+    assert abs(float(loss) - np.log(500)) < 1.0
+
+
+def test_sp_dedupe_mlp_keeps_ff():
+    """I4: inside the MLP, ff must keep the model axis even under SP."""
+    rules = {"batch": "data", "seq": "model", "ff": "model", "heads": "model",
+             "__sizes__": {"data": 16, "model": 16}}
+    with axis_rules(rules):
+        # residual stream (between blocks): seq gets the model axis
+        assert logical_spec(("batch", "seq", None), (256, 4096, 1024)) == \
+            P("data", "model", None)
+        # MLP hidden (inside): ff must get it — the I4 bug was naming seq
+        assert logical_spec(("batch", None, "ff"), (256, 4096, 4096)) == \
+            P("data", None, "model")
+        # attention: heads win over seq (dedupe order)
+        assert logical_spec(("batch", "heads", "seq", None),
+                            (256, 32, 4096, 128)) == \
+            P("data", "model", None, None)
+
+
+def test_divisibility_gate_in_logical_spec():
+    """Non-divisible dims silently replicating caused I9; the gate must
+    drop the axis instead of producing an invalid/uneven constraint."""
+    rules = {"vocab": "model", "__sizes__": {"model": 16}}
+    with axis_rules(rules):
+        assert logical_spec(("vocab",), (256206,)) == P(None)     # ∤ 16
+        assert logical_spec(("vocab",), (256256,)) == P("model")  # ✓
+
+
+def test_head_major_weights_shapes():
+    """I1: attention projections are head-major 3-D for whole-head TP."""
+    from repro.models.attention import AttnDims, gqa_init, mla_init, MLADims
+    p = gqa_init(jax.random.PRNGKey(0),
+                 AttnDims(d_model=64, n_q=8, n_kv=2, head_dim=8))
+    assert p["wq"].shape == (64, 8, 8)
+    assert p["wk"].shape == (64, 2, 8)
+    assert p["wo"].shape == (8, 8, 64)
+    m = mla_init(jax.random.PRNGKey(0),
+                 MLADims(d_model=64, n_heads=4, kv_lora=16, nope_dim=8,
+                         rope_dim=4, v_dim=8))
+    assert m["wq"].shape == (64, 4, 12)
+    assert m["w_uk"].shape == (16, 4, 8)
+    assert m["wo"].shape == (4, 8, 64)
+
+
+def test_grad_specs_plumbed_through_accum():
+    """I2/I3 support: microbatch_grads applies the constraint pytree
+    without altering values (single-device: constraint is a no-op)."""
+    from repro.optim import microbatch_grads
+    w = jnp.ones((8, 4))
+    batch = {"x": jnp.ones((8, 8)), "y": jnp.zeros((8, 4))}
+
+    def loss_fn(p, b):
+        l = jnp.mean((b["x"] @ p - b["y"]) ** 2)
+        return l, {}
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with mesh:
+        l1, g1, _ = microbatch_grads(loss_fn, w, batch, 2)
+        l2, g2, _ = microbatch_grads(loss_fn, w, batch, 2, grad_specs=P())
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-6)
+
+
+def test_dp_shards_reads_rules():
+    from repro.models.layers import dp_shards
+    assert dp_shards() == 1
+    with axis_rules({"batch": ("pod", "data"),
+                     "__sizes__": {"pod": 2, "data": 16, "model": 16}}):
+        assert dp_shards() == 32
+    with axis_rules({"batch": "data", "__sizes__": {"data": 16}}):
+        assert dp_shards() == 16

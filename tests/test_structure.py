@@ -1,0 +1,116 @@
+"""Packing invariants (DESIGN.md §7.2): every non-pad slot appears once,
+children live at strictly earlier levels, sentinel never read unmasked."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.structure import (BucketSpec, InputGraph,
+                                  balanced_binary_tree, chain, fit_bucket,
+                                  from_parent_pointers, pack_batch,
+                                  pack_external, random_binary_tree)
+
+
+def random_forest(seed: int, k: int = 4):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            out.append(chain(int(rng.integers(1, 12))))
+        elif kind == 1:
+            out.append(random_binary_tree(int(rng.integers(1, 10)), rng))
+        else:
+            # random DAG-ish tree via parent pointers
+            n = int(rng.integers(1, 10))
+            parents = [-1] + [int(rng.integers(0, i)) for i in range(1, n)]
+            out.append(from_parent_pointers(parents))
+    return out
+
+
+def test_chain_levels():
+    g = chain(5)
+    assert list(g.levels()) == [0, 1, 2, 3, 4]
+    assert g.roots() == [4]
+
+
+def test_balanced_tree_shape():
+    g = balanced_binary_tree(256)
+    assert g.num_nodes == 511            # the paper's 256-leaf tree
+    assert int(g.levels().max()) == 8
+
+
+def test_balanced_tree_requires_pow2():
+    with pytest.raises(ValueError):
+        balanced_binary_tree(3)
+
+
+def test_cycle_detection():
+    g = InputGraph(children=[[1], [0]])
+    with pytest.raises(ValueError):
+        g.levels()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pack_invariants(seed):
+    graphs = random_forest(seed)
+    sched = pack_batch(graphs)
+    T, M, A = sched.T, sched.M, sched.A
+    sentinel = T * M
+
+    # 1. every real vertex owns exactly one slot; slot ids unique
+    slots = sched.slot_of[sched.node_valid > 0]
+    assert len(np.unique(slots)) == len(slots)
+    assert int(sched.node_mask.sum()) == sum(g.num_nodes for g in graphs)
+
+    # 2. children strictly earlier levels
+    for t in range(T):
+        for m in range(M):
+            for a in range(A):
+                if sched.child_mask[t, m, a] > 0:
+                    child = sched.child_ids[t, m, a]
+                    assert child < t * M, "child not at earlier level"
+
+    # 3. padding slots point at the sentinel everywhere
+    pad = sched.node_mask == 0
+    assert np.all(sched.child_ids[pad] == sentinel)
+    assert np.all(sched.ext_ids[pad] == sched.num_ext_rows)
+
+    # 4. root slots are valid slots of their sample
+    for k, g in enumerate(graphs):
+        assert sched.root_slots[k] in sched.slot_of[k][: g.num_nodes]
+
+
+def test_bucket_padding_reuse():
+    rng = np.random.default_rng(1)
+    graphs = [random_binary_tree(int(rng.integers(2, 12)), rng)
+              for _ in range(32)]
+    spec = fit_bucket(graphs, batch_size=4)
+    s1 = spec.pack(graphs[:4])
+    s2 = spec.pack(graphs[4:8])
+    # identical padded dims → identical compiled program
+    assert (s1.T, s1.M, s1.A, s1.N) == (s2.T, s2.M, s2.A, s2.N)
+
+
+def test_bucket_too_small_raises():
+    with pytest.raises(ValueError):
+        pack_batch([chain(9)], pad_levels=4)
+
+
+def test_pack_external_rows():
+    graphs = [chain(3), chain(2)]
+    sched = pack_batch(graphs)
+    xs = [np.ones((3, 5), np.float32), 2 * np.ones((2, 5), np.float32)]
+    ext = pack_external(xs, sched, 5)
+    assert ext.shape == (sched.num_ext_rows + 1, 5)
+    assert np.all(ext[-1] == 0)          # sentinel row is zeros
+    np.testing.assert_array_equal(ext[0], np.ones(5))
+    np.testing.assert_array_equal(ext[sched.N], 2 * np.ones(5))
+
+
+def test_occupancy_accounting():
+    graphs = [chain(4), chain(2)]
+    sched = pack_batch(graphs)
+    assert 0 < sched.occupancy <= 1.0
+    assert sched.occupancy == sched.node_mask.sum() / (sched.T * sched.M)
