@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Collector, time_fn
+from benchmarks.common import Collector, time_fn, time_stats
 from repro.configs.paper import get_paper_model
 from repro.core.scheduler import (execute, execute_lazy, execute_serial,
                                   readout_roots)
@@ -36,21 +36,35 @@ def bench(col: Collector, bs_list, h_list):
             fn, params, sched, graphs, inputs, ext = setup(bs, h)
             dev = sched.to_device()
 
-            def train_step(p, e):
-                def loss(pp, ee):
-                    buf = execute_lazy(fn, pp, ee, dev)
-                    return jnp.sum(readout_roots(buf, dev) ** 2)
-                return jax.grad(loss)(p, e)
+            def train_step(mode):
+                def step(p, e):
+                    def loss(pp, ee):
+                        buf = execute_lazy(fn, pp, ee, dev, fusion_mode=mode)
+                        return jnp.sum(readout_roots(buf, dev) ** 2)
+                    return jax.grad(loss)(p, e)
+                return jax.jit(step)
 
-            step = jax.jit(train_step)
-            t_b = time_fn(lambda: step(params, ext))
-            col.add("tree_lstm/train_batched", t_b * 1e3, "ms",
-                    f"bs={bs} h={h} occ={sched.occupancy:.2f}")
+            det = f"bs={bs} h={h} occ={sched.occupancy:.2f}"
+            step_un = train_step("none")
+            st_un = time_stats(lambda: step_un(params, ext))
+            col.add_time("tree_lstm/train_batched", st_un, det)
+            step_fu = train_step("megastep")
+            st_fu = time_stats(lambda: step_fu(params, ext))
+            col.add_time("tree_lstm/train_megastep", st_fu, det)
+            col.add("tree_lstm/train_megastep_speedup",
+                    st_un["p50_ms"] / st_fu["p50_ms"], "x", det)
 
-            fwd = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
-            t_f = time_fn(lambda: fwd(params, ext))
-            col.add("tree_lstm/fwd_batched", t_f * 1e3, "ms",
-                    f"bs={bs} h={h}")
+            fwd = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                               fusion_mode="none").buf)
+            sf_un = time_stats(lambda: fwd(params, ext))
+            t_f = sf_un["p50_ms"] / 1e3
+            col.add_time("tree_lstm/fwd_batched", sf_un, f"bs={bs} h={h}")
+            fwd_fu = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                                  fusion_mode="megastep").buf)
+            sf_fu = time_stats(lambda: fwd_fu(params, ext))
+            col.add_time("tree_lstm/fwd_megastep", sf_fu, f"bs={bs} h={h}")
+            col.add("tree_lstm/fwd_megastep_speedup",
+                    sf_un["p50_ms"] / sf_fu["p50_ms"], "x", f"bs={bs} h={h}")
 
             t_s = time_fn(
                 lambda: execute_serial(fn, params, graphs[:2], inputs[:2]),

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Collector, time_fn
+from benchmarks.common import Collector, time_fn, time_stats
 from repro.configs.paper import get_paper_model
 from repro.core.scheduler import execute, execute_serial
 from repro.core.structure import chain, pack_batch, pack_external
@@ -42,10 +42,19 @@ def bench(col: Collector, bs_list, h_list, max_len: int = 64):
         for h in h_list:
             fn, params, sched, graphs, inputs, ext = setup(bs, h, max_len)
             dev = sched.to_device()
-            run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
-            t_b = time_fn(lambda: run(params, ext))
-            col.add("var_lstm/batched", t_b * 1e3, "ms",
-                    f"bs={bs} h={h} occupancy={sched.occupancy:.2f}")
+            run = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                               fusion_mode="none").buf)
+            det = f"bs={bs} h={h} occupancy={sched.occupancy:.2f}"
+            sb_un = time_stats(lambda: run(params, ext))
+            t_b = sb_un["p50_ms"] / 1e3
+            col.add_time("var_lstm/batched", sb_un, det)
+            run_fu = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                                  fusion_mode="megastep").buf)
+            sb_fu = time_stats(lambda: run_fu(params, ext))
+            col.add_time("var_lstm/megastep", sb_fu, det)
+            col.add("var_lstm/megastep_speedup",
+                    sb_un["p50_ms"] / sb_fu["p50_ms"], "x",
+                    f"bs={bs} h={h} (fused level-megastep vs op-by-op)")
 
             # pad-to-max static unrolling (the TF baseline of §2.2)
             padded = [chain(max_len) for _ in range(bs)]
@@ -57,7 +66,8 @@ def bench(col: Collector, bs_list, h_list, max_len: int = 64):
             ext_p = jnp.asarray(pack_external(inputs_p, sched_p,
                                               fn.input_dim))
             dev_p = sched_p.to_device()
-            run_p = jax.jit(lambda p, e: execute(fn, p, dev_p, e).buf)
+            run_p = jax.jit(lambda p, e: execute(fn, p, dev_p, e,
+                                                 fusion_mode="none").buf)
             t_p = time_fn(lambda: run_p(params, ext_p))
             col.add("var_lstm/pad_to_max", t_p * 1e3, "ms",
                     f"bs={bs} h={h}")

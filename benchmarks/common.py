@@ -1,7 +1,10 @@
 """Shared benchmark utilities: timing, CSV emission, model setup.
 
 All benchmarks print ``name,value,unit,detail`` CSV rows so
-``benchmarks/run.py`` can aggregate them into bench_output.txt.
+``benchmarks/run.py`` can aggregate them into bench_output.txt, and
+keep structured records (value + optional mean/p50 stats) that run.py
+serializes to per-suite ``results/BENCH_<suite>.json`` files — the
+machine-readable perf trajectory.
 """
 
 from __future__ import annotations
@@ -13,9 +16,8 @@ import jax
 import numpy as np
 
 
-def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5,
-            min_time_s: float = 0.0) -> float:
-    """Median wall seconds per call of a (jitted) thunk."""
+def _time_loop(fn: Callable[[], Any], warmup: int, iters: int,
+               min_time_s: float) -> List[float]:
     for _ in range(warmup):
         jax.block_until_ready(fn())
     times = []
@@ -30,7 +32,22 @@ def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5,
         i += 1
         if i > 100:
             break
-    return float(np.median(times))
+    return times
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5,
+            min_time_s: float = 0.0) -> float:
+    """Median wall seconds per call of a (jitted) thunk."""
+    return float(np.median(_time_loop(fn, warmup, iters, min_time_s)))
+
+
+def time_stats(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5,
+               min_time_s: float = 0.0) -> Dict[str, float]:
+    """Timing distribution of a thunk: ``p50_ms``, ``mean_ms``, ``iters``."""
+    times = np.asarray(_time_loop(fn, warmup, iters, min_time_s))
+    return {"p50_ms": float(np.median(times) * 1e3),
+            "mean_ms": float(np.mean(times) * 1e3),
+            "iters": int(times.size)}
 
 
 def row(name: str, value: float, unit: str, detail: str = "") -> str:
@@ -40,8 +57,22 @@ def row(name: str, value: float, unit: str, detail: str = "") -> str:
 
 
 class Collector:
+    """Accumulates benchmark rows both as printed CSV (legacy
+    bench_output.txt path) and as structured records for BENCH_*.json."""
+
     def __init__(self):
         self.rows: List[str] = []
+        self.records: List[Dict[str, Any]] = []
 
-    def add(self, name: str, value: float, unit: str, detail: str = ""):
+    def add(self, name: str, value: float, unit: str, detail: str = "",
+            stats: Optional[Dict[str, float]] = None):
         self.rows.append(row(name, value, unit, detail))
+        rec: Dict[str, Any] = {"name": name, "value": float(value),
+                               "unit": unit, "detail": detail}
+        if stats:
+            rec.update(stats)
+        self.records.append(rec)
+
+    def add_time(self, name: str, stats: Dict[str, float], detail: str = ""):
+        """Record a timing with its distribution (value = p50 ms)."""
+        self.add(name, stats["p50_ms"], "ms", detail, stats=stats)

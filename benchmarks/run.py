@@ -4,12 +4,17 @@
 ``python -m benchmarks.run --full``   — the paper-scale sweeps
 
 Emits ``name,value,unit,detail`` CSV rows (captured into
-bench_output.txt by the top-level runs).
+bench_output.txt by the top-level runs) AND, per suite, a
+machine-readable ``results/BENCH_<suite>.json`` with one record per row
+(value + mean/p50 stats for timed rows, fused vs. unfused megastep
+measurements included) — the perf trajectory tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -31,11 +36,30 @@ SUITES = [
 ]
 
 
+def _suite_slug(title: str) -> str:
+    head = title.split()[0]
+    return "".join(ch for ch in head if ch.isalnum() or ch == "_")
+
+
+def _dump_json(title: str, col, out_dir: str, elapsed_s: float) -> None:
+    records = getattr(col, "records", None)
+    if not records:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{_suite_slug(title)}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": title, "elapsed_s": round(elapsed_s, 2),
+                   "rows": records}, f, indent=1)
+    print(f"# wrote {path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="substring filter on suite names")
+    ap.add_argument("--out-dir", default="results",
+                    help="directory for BENCH_<suite>.json records")
     args = ap.parse_args()
 
     print("suite,name,value,unit,detail")
@@ -46,11 +70,13 @@ def main() -> None:
         print(f"# === {title} ===", flush=True)
         t0 = time.time()
         try:
-            mod.main(["--full"] if args.full else [])
+            col = mod.main(["--full"] if args.full else [])
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# SUITE FAILED: {title}", flush=True)
             traceback.print_exc()
+        else:
+            _dump_json(title, col, args.out_dir, time.time() - t0)
         print(f"# --- {title} done in {time.time() - t0:.1f}s", flush=True)
     if failures:
         sys.exit(1)

@@ -218,14 +218,25 @@ def parse_module(text: str) -> Dict[str, Computation]:
                 if depth == 0:
                     break
         operand_str, attrs = rest[:j], rest[j + 1:]
-        operands = [re.sub(r"/\*[^*]*\*/", "", o).strip().lstrip("%")
-                    for o in _split_top(operand_str) if o.strip()]
+        operands = [_operand_name(o) for o in _split_top(operand_str)
+                    if o.strip()]
         ins = Instr(name=name, out_type=out_type, opcode=opcode,
                     operands=operands, attrs=attrs)
         cur.instrs.append(ins)
         cur.shapes[name] = out_type
     comps["__entry__"] = comps.get(entry_name) or _largest(comps)
     return comps
+
+
+def _operand_name(o: str) -> str:
+    """Bare instruction name of one operand.
+
+    Handles both dialects: ``%name`` and the typed form
+    ``f32[4,128]{1,0} %name`` that newer XLA emits (plus ``/*index=k*/``
+    comments inside tuple operand lists)."""
+    o = re.sub(r"/\*[^*]*\*/", "", o).strip()
+    toks = o.split()
+    return (toks[-1] if toks else o).lstrip("%")
 
 
 def _largest(comps):
@@ -488,3 +499,14 @@ def analyze(hlo_text: str) -> Cost:
     entry = comps["__entry__"]
     memo: Dict[str, Cost] = {}
     return _comp_cost(entry, comps, memo)
+
+
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    jaxlib has flip-flopped between returning a dict and a one-element
+    list of dicts; absorb both so callers can ``.get("flops")``."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -26,12 +26,31 @@ The *eager* side of §3.5 (streaming) is ``hoist=True``: when ``F``
 declares ``project_inputs`` (its vertex-independent prefix, e.g. the
 ``W·x`` input projections), it is evaluated for ALL external rows in one
 batched call *before* the sequential region.
+
+Fused megasteps (``fusion_mode``): cells that declare a
+:class:`~repro.core.vertex.GateSpec` can route each batching task
+through ONE fused kernel launch (``kernels/level_megastep.py``) instead
+of gather → apply → scatter as three XLA ops: scalar-prefetched
+``child_ids`` drive the gather DMA, the gate math stays VMEM-resident,
+and the contiguous block write aliases the buffer in place across the
+scan — no per-level HBM round-trip of the ``[M, A, S]`` child states or
+the ``[M, 4H]`` gates.  ``fusion_mode="auto"`` (default; overridable via
+the ``REPRO_FUSION`` env var) fuses whenever the cell supports it;
+``"none"`` keeps the op-by-op path (the correctness oracle and ablation
+baseline); ``"megastep"`` requires fusion and raises when unsupported.
+The fused path carries its own custom VJP: the reverse sweep pushes
+state-chain cotangents back with scatter-adds (∂gather = scatter-add,
+§3.4) and the parameter/external gradients are computed lazily in one
+flat batched pass (§3.5) — so both :func:`execute` and
+:func:`execute_lazy` share one backward, with activations recomputed
+from the node buffer (remat).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -39,8 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.structure import DeviceSchedule, InputGraph, LevelSchedule
-from repro.core.vertex import (VertexFunction, VertexIO, VertexOutput,
-                               apply_unbatched, has_eager_projection)
+from repro.core.vertex import (GateSpec, VertexFunction, VertexIO,
+                               VertexOutput, apply_unbatched,
+                               get_gate_spec, has_eager_projection)
+from repro.kernels import level_megastep as megastep
+from repro.kernels import ops as kops
 
 Params = Any
 Array = jax.Array
@@ -93,18 +115,154 @@ def _maybe_hoist(fn: VertexFunction, params: Params, external: Array,
 
 
 # ---------------------------------------------------------------------------
+# Fused megastep path (one launch per batching task; custom VJP)
+# ---------------------------------------------------------------------------
+
+def _fusion_spec(fn: VertexFunction, fusion_mode: str, *, hoist: bool,
+                 collect_push: bool,
+                 dtype=jnp.float32) -> Optional[GateSpec]:
+    """Resolve the fusion decision: the cell's GateSpec when the fused
+    megastep path applies, else ``None`` (op-by-op path).
+
+    The fused buffer dtype follows the hoisted projection (float32 for
+    every cell in the zoo), so a non-f32 ``dtype`` request falls back
+    to the op-by-op path under "auto" and raises under "megastep".
+    """
+    mode = fusion_mode
+    if mode == "auto":
+        mode = os.environ.get("REPRO_FUSION", "auto")
+    if mode not in ("auto", "megastep", "none"):
+        raise ValueError(f"fusion_mode must be 'auto', 'megastep' or "
+                         f"'none', got {mode!r}")
+    if mode == "none":
+        return None
+    spec = get_gate_spec(fn)
+    f32 = jnp.dtype(dtype) == jnp.float32
+    ok = (spec is not None and has_eager_projection(fn) and hoist
+          and not collect_push and f32)
+    if mode == "megastep" and not ok:
+        raise ValueError(
+            "fusion_mode='megastep' needs a cell with a GateSpec and an "
+            "eager projection, hoist=True, collect_push=False and a "
+            f"float32 buffer dtype (got fn={type(fn).__name__}, "
+            f"hoist={hoist}, collect_push={collect_push}, dtype={dtype})")
+    return spec if ok else None
+
+
+def _megastep_scan(spec: GateSpec, weights, sched: DeviceSchedule,
+                   ext: Array, dtype) -> Array:
+    """Forward scan where each batching task is ONE fused megastep: the
+    buffer is carried (and, on the pallas backend, aliased) in place."""
+    T, M = sched.T, sched.M
+    S = 2 * spec.hidden
+    buf0 = jnp.zeros((T * M + 1, S), dtype)
+
+    def step(buf, xs):
+        t, child_ids, child_mask, ext_ids, node_mask = xs
+        buf = kops.level_megastep(spec.kind, buf, child_ids, child_mask,
+                                  ext_ids, node_mask, t * M, ext, weights)
+        return buf, None
+
+    xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
+          sched.ext_ids, sched.node_mask)
+    buf, _ = jax.lax.scan(step, buf0, xs)
+    return buf
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _execute_megastep(fn: VertexFunction, params: Params, external: Array,
+                      sched: DeviceSchedule) -> Array:
+    """Fused forward (megastep per level) with the fused backward below.
+    Returns the ``[T*M + 1, S]`` buffer; hoisting is always on."""
+    spec = get_gate_spec(fn)
+    ext = fn.project_inputs(params, external)
+    return _megastep_scan(spec, spec.weights(params), sched, ext, ext.dtype)
+
+
+def _megastep_fwd(fn, params, external, sched):
+    ext, hoist_vjp = jax.vjp(
+        lambda p, e: fn.project_inputs(p, e), params, external)
+    spec = get_gate_spec(fn)
+    buf = _megastep_scan(spec, spec.weights(params), sched, ext, ext.dtype)
+    return buf, (params, ext, buf, sched, hoist_vjp)
+
+
+def _megastep_bwd(fn, res, g_buf):
+    """The fused reverse: per-level scatter-add sweep for the state
+    chain (∂gather = scatter-add, §3.4) + ONE flat lazily-batched
+    parameter/external gradient pass (§3.5).  Activations are
+    recomputed from the saved node buffer (remat)."""
+    params, ext, buf, sched, hoist_vjp = res
+    spec = get_gate_spec(fn)
+    weights = spec.weights(params)
+    T, M, A = sched.T, sched.M, sched.A
+    S = 2 * spec.hidden
+    g_buf = g_buf.astype(jnp.float32)
+
+    def rev_step(g, xs):
+        t, child_ids, child_mask, ext_ids, node_mask = xs
+        g_state = jax.lax.dynamic_slice(g, (t * M, 0), (M, S))
+        g_state = g_state * node_mask[:, None].astype(g.dtype)
+        child = jnp.take(buf, child_ids.reshape(-1),
+                         axis=0).reshape(M, A, S)
+        rows = jnp.take(ext, ext_ids, axis=0)
+        g_child, _, _ = megastep.level_bwd(spec.kind, g_state, child, rows,
+                                           child_mask, weights)
+        g = g.at[child_ids.reshape(-1)].add(
+            g_child.reshape(M * A, S).astype(g.dtype), mode="drop",
+            unique_indices=False, indices_are_sorted=False)
+        return g, g_state
+
+    xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
+          sched.ext_ids, sched.node_mask)
+    _, g_states = jax.lax.scan(rev_step, g_buf, xs, reverse=True)
+    g_state_flat = g_states.reshape(T * M, S)
+
+    # Lazy batching: one analytic pass over ALL T*M slots for the
+    # parameter and pulled-row gradients.
+    cid_flat = sched.child_ids.reshape(T * M, A)
+    child_flat = jnp.take(buf, cid_flat.reshape(-1),
+                          axis=0).reshape(T * M, A, S)
+    rows_flat = jnp.take(ext, sched.ext_ids.reshape(T * M), axis=0)
+    cmask_flat = sched.child_mask.reshape(T * M, A)
+    _, d_gates, aux = megastep.level_bwd(spec.kind, g_state_flat, child_flat,
+                                         rows_flat, cmask_flat, weights)
+    w_grads = megastep.level_param_grads(spec.kind, d_gates, aux, weights)
+    g_params = spec.inject_grads(params, w_grads)
+
+    # ∂pull = push: scatter row cotangents back to the packed matrix,
+    # then run the hoisted projection's VJP once.
+    g_ext = jnp.zeros_like(ext).at[sched.ext_ids.reshape(T * M)].add(
+        d_gates.astype(ext.dtype), mode="drop")
+    g_params_hoist, g_external = hoist_vjp(g_ext)
+    g_params = jax.tree.map(jnp.add, g_params, g_params_hoist)
+    g_sched = jax.tree.map(_zero_ct, sched)
+    return g_params, g_external, g_sched
+
+
+_execute_megastep.defvjp(_megastep_fwd, _megastep_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Batched forward (the paper's FORWARD, Alg. 1)
 # ---------------------------------------------------------------------------
 
 def execute(fn: VertexFunction, params: Params, sched: DeviceSchedule,
             external: Array, *, hoist: bool = True,
             collect_push: bool = False,
-            dtype: jnp.dtype = jnp.float32) -> ExecResult:
+            dtype: jnp.dtype = jnp.float32,
+            fusion_mode: str = "auto") -> ExecResult:
     """Run the batching policy over a packed minibatch of graphs.
 
     ``external``: ``[R + 1, X_raw]`` packed external inputs (last row is
     the zero sentinel).  Differentiable in ``params`` and ``external``.
+    ``fusion_mode``: ``"auto"`` | ``"megastep"`` | ``"none"`` — see the
+    module docstring; the fused path returns the same buffer to 1e-4.
     """
+    spec = _fusion_spec(fn, fusion_mode, hoist=hoist,
+                        collect_push=collect_push, dtype=dtype)
+    if spec is not None:
+        return ExecResult(buf=_execute_megastep(fn, params, external, sched))
     T, M = sched.T, sched.M
     S = fn.state_dim
     ext, project_per_level = _maybe_hoist(fn, params, external, hoist)
@@ -179,11 +337,27 @@ def _zero_ct(x):
     return np.zeros(jnp.shape(x), jax.dtypes.float0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def execute_lazy(fn: VertexFunction, params: Params, external: Array,
-                 sched: DeviceSchedule) -> Array:
+                 sched: DeviceSchedule, fusion_mode: str = "auto") -> Array:
     """Like :func:`execute` (hoist on, no push) but with the lazy-batched
-    backward.  Returns the ``[T*M + 1, S]`` buffer."""
+    backward.  Returns the ``[T*M + 1, S]`` buffer.
+
+    With ``fusion_mode`` "auto"/"megastep" and a GateSpec-declaring
+    cell, forward AND backward route through the fused megastep path
+    (whose backward is itself lazy-batched); ``"none"`` keeps the
+    op-by-op lazy path below as the ablation baseline.
+    """
+    spec = _fusion_spec(fn, fusion_mode, hoist=True, collect_push=False)
+    if spec is not None:
+        return _execute_megastep(fn, params, external, sched)
+    return _execute_lazy_opbyop(fn, params, external, sched)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _execute_lazy_opbyop(fn: VertexFunction, params: Params, external: Array,
+                         sched: DeviceSchedule) -> Array:
+    """Op-by-op lazy path: scan of gather/apply/scatter ops with the
+    flat lazy-batched parameter-gradient backward."""
     ext, _ = _maybe_hoist(fn, params, external, True)
     return _forward_buf(fn, params, sched, ext, ext.dtype)
 
@@ -249,7 +423,7 @@ def _lazy_bwd(fn, res, g_buf):
     return g_params, g_external, g_sched
 
 
-execute_lazy.defvjp(_lazy_fwd, _lazy_bwd)
+_execute_lazy_opbyop.defvjp(_lazy_fwd, _lazy_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,8 @@ same static shape, XLA compiles ``F`` exactly once — the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Protocol, runtime_checkable
+from typing import (Any, Callable, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +98,49 @@ class VertexOutput:
     state: Array
     #: ``[M, O]`` pushed output, or ``None`` if this F pushes nothing.
     push: Optional[Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GateSpec:
+    """A cell's declaration that its gate math is *megastep-fusable*.
+
+    The fused level-megastep kernel (``kernels/level_megastep.py``) can
+    only run cells whose vertex function factors as
+
+        gates = pulled_ext_proj + recurrent(child_states) ; state = cell(gates)
+
+    with a known ``kind``.  A cell that declares a ``GateSpec`` (via a
+    ``gate_spec()`` method) opts into the scheduler's fused path: one
+    Pallas launch per batching task instead of gather → apply → scatter
+    as three separate XLA ops.  ``weight_names`` are the keys of the
+    params dict the kernel consumes (the eager ``wx`` projection stays
+    outside — it is hoisted, §3.5); the analytic backward writes its
+    gradients back under the same keys.
+    """
+
+    #: "lstm" (arity-1, state ``[c|h]``) or "treelstm" (N-ary child-sum,
+    #: state ``[c|h]``; paper Fig. 4).
+    kind: str
+    hidden: int
+    weight_names: Tuple[str, ...]
+
+    def weights(self, params: Params) -> Tuple[Array, ...]:
+        return tuple(params[n] for n in self.weight_names)
+
+    def inject_grads(self, params: Params, grads: Sequence[Array]) -> Params:
+        """Zero cotangent tree for ``params`` with the megastep weight
+        gradients filled in (the hoisted ``wx`` grads are added by the
+        caller via the projection VJP)."""
+        out = jax.tree.map(jnp.zeros_like, params)
+        for name, g in zip(self.weight_names, grads):
+            out[name] = g
+        return out
+
+
+def get_gate_spec(fn: Any) -> Optional[GateSpec]:
+    """The cell's fusable gate declaration, or ``None`` (unfused path)."""
+    getter = getattr(fn, "gate_spec", None)
+    return getter() if callable(getter) else None
 
 
 @runtime_checkable

@@ -1,0 +1,13 @@
+"""Distribution layer: sharding specs, gradient compression, fault
+tolerance, elastic re-meshing, and pipeline parallelism.
+
+The modules are deliberately mesh-agnostic where possible: ``sharding``
+produces :class:`jax.sharding.PartitionSpec` trees from *shape + name*
+heuristics gated by divisibility (never shard inside a head / an
+expert), so the same policy object serves every architecture in
+``repro.configs.archs``.
+"""
+
+from repro.dist import compress, elastic, fault, pipeline, sharding
+
+__all__ = ["compress", "elastic", "fault", "pipeline", "sharding"]

@@ -1,0 +1,47 @@
+"""Elastic re-meshing: shrink the data-parallel extent after failures
+while preserving the tensor-parallel degree (params stay resharded-free
+along ``model``; only DP replicas are dropped)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class DownsizePlan:
+    new_shape: Dict[str, int]
+    dropped_rows: int
+
+
+def plan_downsize(shape: Dict[str, int], dead_fraction: float) -> DownsizePlan:
+    """Shrink the outermost non-``model`` axis to the largest power of
+    two that fits the surviving devices.  TP degree is preserved so the
+    parameter sharding (and the compiled program) survive the restart.
+    """
+    new = dict(shape)
+    data_axes = [a for a in shape if a != "model"]
+    if not data_axes:
+        return DownsizePlan(new_shape=new, dropped_rows=0)
+    ax = data_axes[0]
+    surviving = shape[ax] * (1.0 - dead_fraction)
+    if surviving < 1.0:
+        raise ValueError(f"dead_fraction={dead_fraction} leaves no {ax} rows")
+    new_n = 1 << int(math.floor(math.log2(surviving)))
+    new[ax] = new_n
+    return DownsizePlan(new_shape=new, dropped_rows=shape[ax] - new_n)
+
+
+def remesh(devices: Sequence, shape: Dict[str, int]) -> Mesh:
+    """Build a mesh of ``shape`` from ``devices`` (first ``prod(shape)``
+    of them); raises ``ValueError`` when not enough survive."""
+    need = math.prod(shape.values())
+    if len(devices) < need:
+        raise ValueError(
+            f"need {need} devices for mesh {shape}, have {len(devices)}")
+    arr = np.asarray(list(devices[:need])).reshape(tuple(shape.values()))
+    return Mesh(arr, tuple(shape))

@@ -1,0 +1,246 @@
+"""Sharding-spec resolution: logical rules + name/shape heuristics.
+
+Two layers:
+
+  1. :func:`resolve_spec` — the *divisibility gate*: a mesh axis (or a
+     tuple of axes) is kept on a tensor dim only if its total size
+     divides that dim.  Everything else in this module funnels through
+     it, so no spec ever splits within a head, an expert, or a
+     non-divisible batch.
+
+  2. :class:`ShardingPolicy` + the ``*_specs`` functions — map
+     parameter / cache / batch pytrees to candidate logical axes by
+     (name, rank) heuristics, then resolve them.  The same policy also
+     emits the logical→mesh ``rules`` dict consumed by
+     ``repro.models.layers.axis_rules`` for activation sharding.
+
+Conventions (see ``launch/mesh.py``): axis ``data`` carries DP/FSDP,
+``model`` carries TP/EP/SP, ``pod`` (when present) folds into DP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axes = Sequence[Any]   # per-dim: axis name | tuple of names | None
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _flat(ax) -> Tuple[str, ...]:
+    if ax is None:
+        return ()
+    if isinstance(ax, (tuple, list)):
+        return tuple(a for a in ax if a)
+    return (ax,)
+
+
+def resolve_spec(mesh, shape: Sequence[int], axes: Axes) -> P:
+    """Candidate per-dim axes → PartitionSpec, dropping any axis whose
+    total mesh size does not divide the dimension (or is trivially 1).
+
+    ``axes`` entries may be a mesh-axis name, a tuple of names (sizes
+    multiply), or ``None``.
+    """
+    sizes = _axis_sizes(mesh)
+    out = []
+    for dim, ax in zip(shape, tuple(axes) + (None,) * (len(shape) - len(axes))):
+        flat = _flat(ax)
+        total = math.prod(sizes.get(a, 1) for a in flat) if flat else 1
+        if flat and total > 1 and dim % total == 0:
+            out.append(tuple(ax) if isinstance(ax, (tuple, list)) else ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """What the job wants sharded, independent of any specific mesh.
+
+    ``fsdp``: additionally shard parameter "embed-like" dims over the
+    data axis (ZeRO-3 style).  ``sp``: Megatron sequence parallelism on
+    the residual stream.  ``expert_axis``: ``"experts"`` (EP: shard the
+    expert dim) or ``"ff"`` (TP inside each expert).
+    """
+
+    fsdp: bool = False
+    sp: bool = False
+    expert_axis: str = "experts"
+
+    # -- logical rules for activation sharding (models/layers.py) ------
+    def rules(self, mesh) -> Dict[str, Any]:
+        axes = list(mesh.shape)
+        dp = tuple(a for a in axes if a != "model")
+        batch = dp if len(dp) > 1 else (dp[0] if dp else None)
+        return {
+            "batch": batch,
+            "heads": "model",
+            "kv_heads": "model",
+            "ff": "model",
+            "vocab": "model",
+            "model": "model",
+            "experts": "model" if self.expert_axis == "experts" else None,
+            "seq": "model" if self.sp else None,
+            "fsdp": "data" if self.fsdp else None,
+            "__sizes__": _axis_sizes(mesh),
+        }
+
+
+def policy_for_mesh(mesh, *, fsdp: bool = False, sp: bool = False,
+                    expert_axis: str = "experts") -> ShardingPolicy:
+    """Build the default policy for a mesh (the mesh argument exists so
+    callers can specialize on topology later; today the policy is
+    mesh-independent and the mesh is consulted at resolve time)."""
+    del mesh
+    return ShardingPolicy(fsdp=fsdp, sp=sp, expert_axis=expert_axis)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+_DOWNISH = ("down", "out", "wo")
+
+
+def _is_downish(name: str) -> bool:
+    return any(t in name for t in _DOWNISH)
+
+
+def _param_axes(name: str, shape: Sequence[int],
+                policy: ShardingPolicy) -> Tuple[Any, ...]:
+    """Candidate logical axes for one parameter leaf, by (name, rank).
+
+    Layouts covered (the whole ``configs.archs`` zoo):
+      2D dense      [D_in, D_out]         — shard the ff-like dim
+      3D attention  [D, H, Dh] / [H, Dh, D] — shard heads, never Dh
+      4D MoE stack  [R, E, D, F]          — EP on E or TP on the ff dim
+      embeddings    [V, D]                — vocab on model (+ fsdp on D)
+    """
+    n = name.lower()
+    nd = len(shape)
+    fsdp = "data" if policy.fsdp else None
+    if nd == 2 and ("embed" in n or "vocab" in n or n == "head"):
+        return ("model", fsdp)
+    if nd == 4:
+        if policy.expert_axis == "experts":
+            return (None, "model", None, None)
+        if _is_downish(n):
+            return (None, None, "model", None)
+        return (None, None, None, "model")
+    if nd == 3:
+        if _is_downish(n):
+            return ("model", None, fsdp)
+        return (fsdp, "model", None)
+    if nd == 2:
+        if _is_downish(n):
+            return ("model", fsdp)
+        return (fsdp, "model")
+    return (None,) * nd
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def param_specs(params: Any, mesh, policy: Optional[ShardingPolicy]) -> Any:
+    """PartitionSpec pytree congruent with ``params``.
+
+    Head/expert boundaries are respected via the divisibility gate: a
+    GQA ``wk`` with fewer kv heads than the model axis REPLICATES
+    instead of splitting within heads (splitting forces involuntary
+    rematerialization of the all-gathered weight every layer).
+    """
+    policy = policy or ShardingPolicy()
+
+    def spec(path, leaf):
+        shape = jax.numpy.shape(leaf) if not hasattr(leaf, "shape") \
+            else tuple(leaf.shape)
+        return resolve_spec(mesh, shape,
+                            _param_axes(_leaf_name(path), shape, policy))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def _cache_axes(path, shape: Sequence[int]) -> Tuple[Any, ...]:
+    """Candidate axes for a cache leaf.
+
+    Stacked (scanned-layer) leaves — anything under a ``pattern`` key —
+    get a leading ``None`` for the stack dim.  After the batch dim
+    (``data``), the ``model`` axis goes on the heads dim when it
+    divides, else falls back to the sequence dim (GQA fallback); the
+    trailing feature dim is never sharded.
+    """
+    keys = [str(getattr(p, "key", "")) for p in path]
+    off = 1 if "pattern" in keys else 0
+    axes: list = [None] * len(shape)
+    if len(shape) <= off:
+        return tuple(axes), []
+    axes[off] = "data"
+    # candidate model dims: heads then seq for 4D+ leaves, else just the
+    # dim right after batch; the last dim is always the feature dim.
+    n_rest = len(shape) - off
+    cands = [off + 1, off + 2] if n_rest >= 4 else [off + 1]
+    axes_for_model = [d for d in cands if d < len(shape) - 1]
+    return tuple(axes), axes_for_model
+
+
+def cache_specs(cache: Any, mesh, policy: Optional[ShardingPolicy]) -> Any:
+    del policy  # cache sharding is policy-independent today
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        axes, model_dims = _cache_axes(path, shape)
+        axes = list(axes)
+        for d in model_dims:
+            if msize > 1 and shape[d] % msize == 0:
+                axes[d] = "model"
+                break
+        return resolve_spec(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# Batches / generic helpers
+# ---------------------------------------------------------------------------
+
+def batch_specs(policy: Optional[ShardingPolicy], mesh,
+                shapes: Dict[str, Sequence[int]]) -> Dict[str, P]:
+    """Leading dim over all DP axes (pod folds into DP), rest replicated."""
+    del policy
+    dp = tuple(a for a in mesh.shape if a != "model")
+    batch_ax: Any = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {}
+    for k, shp in shapes.items():
+        shp = tuple(shp)
+        axes = ((batch_ax,) + (None,) * (len(shp) - 1)) if shp else ()
+        out[k] = resolve_spec(mesh, shp, axes)
+    return out
+
+
+def shardings_for(abstract: Any, specs: Any, mesh) -> Any:
+    """Spec pytree → NamedSharding pytree (same structure)."""
+    del abstract
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

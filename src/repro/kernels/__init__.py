@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: <name>.py holds the Pallas kernels, ref.py the jnp
+# oracles, ops.py the backend dispatch (pallas / chunked / ref).
+# Hot-spots covered: the Cavs gather/scatter memcpy primitives
+# (gather_scatter.py), fused RNN cells (cell_kernels.py,
+# level_step.py), the fused level-megastep — one launch per batching
+# task with the node buffer aliased in place (level_megastep.py) —
+# plus attention and SSD kernels for the transformer/mamba zoo.

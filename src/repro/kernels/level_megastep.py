@@ -1,0 +1,350 @@
+"""Fused level-megastep: one Pallas launch per batching task.
+
+The scheduler's op-by-op path realizes one batching task ``V_t`` as
+three XLA ops — ``jnp.take`` (gather), ``fn.apply`` (cell), and
+``dynamic_update_slice`` (scatter) — so every level round-trips the
+``[M, A, S]`` gathered child states and the ``[M, 4H]`` gate tensor
+through HBM.  The megastep fuses the whole task:
+
+  (a) **gather** — the node-state buffer is the kernel's (aliased)
+      input; scalar-prefetched ``child_ids`` drive the BlockSpec index
+      maps, so the DMA engine streams each child row HBM→VMEM directly
+      (zero gather arithmetic in the vector units, same discipline as
+      ``kernels/gather_scatter.py``);
+  (b) **cell** — the recurrent matmuls run on the MXU against
+      VMEM-resident weights, the ext-proj row (hoisted ``W·x``, §3.5)
+      is streamed in per slot, and the gate nonlinearities + state
+      update stay in registers — the ``[·,4H]`` gates never exist in
+      HBM;
+  (c) **scatter** — task ``t`` owns the contiguous buffer block
+      ``[t·M, (t+1)·M)`` (§3.3), so the result is a plain block write,
+      and ``input_output_aliases`` pins the output to the input buffer:
+      the ``lax.scan`` carries ONE buffer in place, no per-level copy.
+
+Reads and writes never overlap (children live at levels ``< t``), which
+is what makes the in-place alias sound.
+
+Supported gate kinds (see ``core.vertex.GateSpec``):
+
+  - ``"lstm"``     — arity-1 LSTM, state ``[c|h]``, weights ``(wh, b)``;
+  - ``"treelstm"`` — N-ary child-sum Tree-LSTM (paper Fig. 4), state
+    ``[c|h]``, weights ``(ui, uf, uo, uu, b)``.  The kernel walks the
+    ``A`` children on an inner grid axis, accumulating ``Σ h_k`` and
+    ``Σ f_k·c_k`` in VMEM scratch, and emits the state on the last
+    child step.
+
+VMEM budget: weights dominate — LSTM ``W_h`` f32 ``[H, 4H]`` is 4 MB at
+H=512; Tree-LSTM's four ``[H, H]`` blocks total the same.  Add the
+``[1, S]``/``[1, 4H]`` row blocks and two ``[1, H]`` scratch rows:
+< 4.2 MB at the largest paper config — comfortably inside 16 MB.  On
+hardware the row blocks want ``S`` and ``4H`` to be lane-aligned
+(multiples of 128); interpret mode (CPU tests) has no such restriction.
+
+The backward half lives here too: :func:`level_bwd` /
+:func:`level_param_grads` are the analytic reverse of one megastep —
+``∂gather = scatter-add`` (§3.4) for the state chain, plus the pieces
+the scheduler's lazy pass batches into ONE flat param-gradient
+evaluation over all ``T·M`` slots (§3.5).  Activations are recomputed
+from the node buffer (the forward saves nothing else), so the fused
+path doubles as a rematerialization policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Forward kernels
+# ---------------------------------------------------------------------------
+
+def _lstm_kernel(cids_ref, eids_ref, off_ref, nmask_ref,
+                 child_ref, ext_ref, wh_ref, b_ref, out_ref, *, H: int):
+    del cids_ref, eids_ref, off_ref  # consumed by the index maps
+    m = pl.program_id(0)
+    prev = child_ref[...].astype(jnp.float32)                # [1, 2H]
+    c_prev, h_prev = prev[:, :H], prev[:, H:]
+    gates = ext_ref[...].astype(jnp.float32) + jax.lax.dot_general(
+        h_prev, wh_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b_ref[...].astype(jnp.float32)
+    i = jax.nn.sigmoid(gates[:, :H])
+    f = jax.nn.sigmoid(gates[:, H: 2 * H] + 1.0)
+    o = jax.nn.sigmoid(gates[:, 2 * H: 3 * H])
+    u = jnp.tanh(gates[:, 3 * H:])
+    c = f * c_prev + i * u
+    h = o * jnp.tanh(c)
+    nm = nmask_ref[m].astype(jnp.float32)
+    out_ref[...] = (jnp.concatenate([c, h], axis=-1) * nm).astype(out_ref.dtype)
+
+
+def lstm_megastep(buf: Array, child_ids: Array, ext_ids: Array,
+                  node_mask: Array, offset: Array, ext: Array,
+                  wh: Array, b: Array, *, interpret: bool = False) -> Array:
+    """One fused LSTM batching task, in place.
+
+    ``buf``: ``[T*M+1, 2H]`` node-state buffer (aliased: the output IS
+    this buffer with block ``[offset, offset+M)`` replaced);
+    ``child_ids``: ``[M, A]`` buffer rows (column 0 is the predecessor;
+    absent children point at the zero sentinel); ``ext_ids``: ``[M]``
+    rows of ``ext``; ``offset``: scalar ``t*M``.
+    """
+    M = child_ids.shape[0]
+    H = wh.shape[0]
+    S = buf.shape[1]
+    spec_row = lambda f: pl.BlockSpec((1, S), f)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(M,),
+        in_specs=[
+            spec_row(lambda m, c, e, o, n: (c[m, 0], 0)),            # gather
+            pl.BlockSpec((1, 4 * H), lambda m, c, e, o, n: (e[m], 0)),  # pull
+            pl.BlockSpec((H, 4 * H), lambda m, c, e, o, n: (0, 0)),  # resident
+            pl.BlockSpec((1, 4 * H), lambda m, c, e, o, n: (0, 0)),
+        ],
+        out_specs=spec_row(lambda m, c, e, o, n: (o[0] + m, 0)),     # scatter
+    )
+    return pl.pallas_call(
+        functools.partial(_lstm_kernel, H=H),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={4: 0},     # buf (first tensor operand) → out
+        interpret=interpret,
+    )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
+      jnp.reshape(offset, (1,)).astype(jnp.int32),
+      (node_mask > 0).astype(jnp.int32),
+      buf, ext, wh, b[None, :])
+
+
+def _treelstm_kernel(cids_ref, eids_ref, off_ref, nmask_ref,
+                     child_ref, ext_ref, ui_ref, uf_ref, uo_ref, uu_ref,
+                     b_ref, out_ref, hsum_ref, cf_ref, *, H: int, A: int):
+    del cids_ref, eids_ref, off_ref
+    m, a = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(a == 0)
+    def _init():
+        hsum_ref[...] = jnp.zeros_like(hsum_ref)
+        cf_ref[...] = jnp.zeros_like(cf_ref)
+
+    child = child_ref[...].astype(jnp.float32)               # [1, 2H]
+    c_k, h_k = child[:, :H], child[:, H:]
+    ext = ext_ref[...].astype(jnp.float32)                   # [1, 4H]
+    bias = b_ref[...].astype(jnp.float32)
+    # Per-child forget gate against h_k (Fig. 4 L9-11).  Absent children
+    # gathered the zero sentinel, so f_k·c_k contributes exactly 0 and
+    # h_k adds 0 to the child-sum — no mask arithmetic needed in-kernel.
+    f_k = jax.nn.sigmoid(
+        ext[:, H: 2 * H] + jax.lax.dot_general(
+            h_k, uf_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) + bias[:, H: 2 * H])
+    cf_ref[...] += f_k * c_k
+    hsum_ref[...] += h_k
+
+    @pl.when(a == A - 1)
+    def _emit():
+        h_sum = hsum_ref[...]
+
+        def rec(w_ref):
+            return jax.lax.dot_general(
+                h_sum, w_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+        i = jax.nn.sigmoid(ext[:, :H] + rec(ui_ref) + bias[:, :H])
+        o = jax.nn.sigmoid(ext[:, 2 * H: 3 * H] + rec(uo_ref)
+                           + bias[:, 2 * H: 3 * H])
+        u = jnp.tanh(ext[:, 3 * H:] + rec(uu_ref) + bias[:, 3 * H:])
+        c = i * u + cf_ref[...]
+        h = o * jnp.tanh(c)
+        nm = nmask_ref[m].astype(jnp.float32)
+        out_ref[...] = (jnp.concatenate([c, h], axis=-1) * nm
+                        ).astype(out_ref.dtype)
+
+
+def treelstm_megastep(buf: Array, child_ids: Array, ext_ids: Array,
+                      node_mask: Array, offset: Array, ext: Array,
+                      ui: Array, uf: Array, uo: Array, uu: Array, b: Array,
+                      *, interpret: bool = False) -> Array:
+    """One fused N-ary child-sum Tree-LSTM batching task, in place.
+
+    Grid ``(M, A)``: the inner axis walks the children of slot ``m``,
+    accumulating the child-sum terms in VMEM scratch; the state is
+    emitted (and block-written at row ``offset+m``) on the last step.
+    """
+    M, A = child_ids.shape
+    H = ui.shape[0]
+    S = buf.shape[1]
+    spec_row = lambda f: pl.BlockSpec((1, S), f)     # noqa: E731
+    spec_w = pl.BlockSpec((H, H), lambda m, a, c, e, o, n: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(M, A),
+        in_specs=[
+            spec_row(lambda m, a, c, e, o, n: (c[m, a], 0)),          # gather
+            pl.BlockSpec((1, 4 * H), lambda m, a, c, e, o, n: (e[m], 0)),
+            spec_w, spec_w, spec_w, spec_w,
+            pl.BlockSpec((1, 4 * H), lambda m, a, c, e, o, n: (0, 0)),
+        ],
+        out_specs=spec_row(lambda m, a, c, e, o, n: (o[0] + m, 0)),   # scatter
+        scratch_shapes=[pltpu.VMEM((1, H), jnp.float32),
+                        pltpu.VMEM((1, H), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_treelstm_kernel, H=H, A=A),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
+      jnp.reshape(offset, (1,)).astype(jnp.int32),
+      (node_mask > 0).astype(jnp.int32),
+      buf, ext, ui, uf, uo, uu, b[None, :])
+
+
+# ---------------------------------------------------------------------------
+# Analytic backward of one megastep (jnp; shared by the reverse sweep
+# and the flat lazy parameter-gradient pass)
+# ---------------------------------------------------------------------------
+
+def _lstm_bwd(g_state, child, ext_rows, child_mask, weights):
+    wh, b = weights
+    H = wh.shape[0]
+    prev = child[:, 0, :].astype(jnp.float32)
+    c_prev, h_prev = prev[:, :H], prev[:, H:]
+    gates = ext_rows.astype(jnp.float32) + h_prev @ wh.astype(jnp.float32) \
+        + b.astype(jnp.float32)
+    i = jax.nn.sigmoid(gates[:, :H])
+    f = jax.nn.sigmoid(gates[:, H: 2 * H] + 1.0)
+    o = jax.nn.sigmoid(gates[:, 2 * H: 3 * H])
+    u = jnp.tanh(gates[:, 3 * H:])
+    c = f * c_prev + i * u
+    tc = jnp.tanh(c)
+    g_c, g_h = g_state[:, :H], g_state[:, H:]
+    g_o = g_h * tc
+    gc = g_c + g_h * o * (1.0 - tc * tc)
+    d_gates = jnp.concatenate([
+        gc * u * i * (1.0 - i),
+        gc * c_prev * f * (1.0 - f),
+        g_o * o * (1.0 - o),
+        gc * i * (1.0 - u * u),
+    ], axis=-1)
+    g_child = jnp.concatenate([gc * f, d_gates @ wh.astype(jnp.float32).T],
+                              axis=-1)[:, None, :] * child_mask[..., None]
+    return g_child, d_gates, (h_prev,)
+
+
+def _treelstm_bwd(g_state, child, ext_rows, child_mask, weights):
+    ui, uf, uo, uu, b = [w.astype(jnp.float32) for w in weights]
+    H = ui.shape[0]
+    mk = child_mask[..., None].astype(jnp.float32)
+    cs = child.astype(jnp.float32) * mk
+    c_k, h_k = cs[..., :H], cs[..., H:]
+    h_sum = jnp.sum(h_k, axis=1)
+    ext_rows = ext_rows.astype(jnp.float32)
+    xi, xf, xo, xu = jnp.split(ext_rows, 4, axis=-1)
+    bi, bf, bo, bu = jnp.split(b, 4)
+    i = jax.nn.sigmoid(xi + h_sum @ ui + bi)
+    f = jax.nn.sigmoid(xf[:, None, :] + jnp.einsum("nah,hg->nag", h_k, uf)
+                       + bf)
+    o = jax.nn.sigmoid(xo + h_sum @ uo + bo)
+    u = jnp.tanh(xu + h_sum @ uu + bu)
+    c = i * u + jnp.sum(f * c_k * mk, axis=1)
+    tc = jnp.tanh(c)
+    g_c, g_h = g_state[:, :H], g_state[:, H:]
+    g_o = g_h * tc
+    gc = g_c + g_h * o * (1.0 - tc * tc)
+    d_i = gc * u * i * (1.0 - i)
+    d_u = gc * i * (1.0 - u * u)
+    d_o = g_o * o * (1.0 - o)
+    d_f = (gc[:, None, :] * c_k * mk) * f * (1.0 - f)        # [N, A, H]
+    d_gates = jnp.concatenate(
+        [d_i, jnp.sum(d_f, axis=1), d_o, d_u], axis=-1)
+    g_h_k = (d_i @ ui.T + d_o @ uo.T + d_u @ uu.T)[:, None, :] \
+        + jnp.einsum("nag,hg->nah", d_f, uf)
+    g_c_k = gc[:, None, :] * f
+    g_child = jnp.concatenate([g_c_k, g_h_k], axis=-1) * mk
+    return g_child, d_gates, (d_i, d_f, d_o, d_u, h_sum, h_k)
+
+
+def level_bwd(kind: str, g_state: Array, child: Array, ext_rows: Array,
+              child_mask: Array, weights: Tuple[Array, ...]
+              ) -> Tuple[Array, Array, Tuple[Array, ...]]:
+    """Reverse one megastep analytically (activations recomputed from
+    the gathered child rows — the remat policy).
+
+    ``g_state``: ``[N, S]`` node-masked state cotangent; ``child``:
+    ``[N, A, S]`` gathered child rows; ``ext_rows``: ``[N, 4H]``.
+
+    Returns ``(g_child, d_gates, aux)``: ``g_child`` ``[N, A, S]`` is
+    the child-mask-masked cotangent to scatter-ADD into the buffer
+    (∂gather = scatter-add, §3.4); ``d_gates`` ``[N, 4H]`` is the
+    pulled-row cotangent (∂pull = push); ``aux`` feeds
+    :func:`level_param_grads`.
+    """
+    fn = {"lstm": _lstm_bwd, "treelstm": _treelstm_bwd}.get(kind)
+    if fn is None:
+        raise ValueError(f"unknown megastep gate kind: {kind!r}")
+    return fn(g_state, child, ext_rows, child_mask, weights)
+
+
+def level_param_grads(kind: str, d_gates: Array, aux: Tuple[Array, ...],
+                      weights: Tuple[Array, ...]) -> Tuple[Array, ...]:
+    """Weight gradients from ONE flat batched pass over all slots
+    (paper §3.5 lazy batching: the parameter-gradient operators run
+    once over ``T·M`` rows, not once per task).  Output order matches
+    ``GateSpec.weight_names``.
+    """
+    if kind == "lstm":
+        (h_prev,) = aux
+        wh, _ = weights
+        return (h_prev.T @ d_gates).astype(wh.dtype), \
+            jnp.sum(d_gates, axis=0)
+    if kind == "treelstm":
+        d_i, d_f, d_o, d_u, h_sum, h_k = aux
+        return (h_sum.T @ d_i,
+                jnp.einsum("nah,nag->hg", h_k, d_f),
+                h_sum.T @ d_o,
+                h_sum.T @ d_u,
+                jnp.concatenate([jnp.sum(d_i, axis=0),
+                                 jnp.sum(d_f, axis=(0, 1)),
+                                 jnp.sum(d_o, axis=0),
+                                 jnp.sum(d_u, axis=0)]))
+    raise ValueError(f"unknown megastep gate kind: {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Roofline accounting (HBM traffic per batching task)
+# ---------------------------------------------------------------------------
+
+def level_traffic_bytes(kind: str, M: int, A: int, S: int, H: int,
+                        fused: bool, itemsize: int = 4) -> int:
+    """Modeled HBM bytes moved by ONE batching task's forward.
+
+    Unfused (gather → F → scatter as separate XLA ops), per level:
+    the gather writes+rereads ``[M, A, S]``, the ext pull writes+rereads
+    ``[M, 4H]``, the dot roots the fusion so the ``[M, 4H]`` gate tensor
+    round-trips, and the state is written then re-read by the
+    ``dynamic_update_slice``.  Fused: child rows and ext rows are read
+    ONCE (HBM→VMEM) and the state block is written once — every
+    intermediate lives in VMEM/registers.  Weight traffic is identical
+    (resident either way under scan) and excluded.
+    """
+    g = 4 * H
+    read_children = M * A * S
+    read_ext = M * g
+    write_state = M * S
+    if fused:
+        return (read_children + read_ext + write_state) * itemsize
+    gather_rt = 2 * read_children          # materialize + re-read
+    ext_rt = 2 * read_ext                  # pulled rows materialize + re-read
+    gates_rt = 2 * M * g                   # dot output round-trips
+    dus_rt = 2 * write_state               # state tensor + buffer update
+    return (read_children + read_ext + gather_rt + ext_rt + gates_rt
+            + dus_rt) * itemsize

@@ -74,6 +74,38 @@ def treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k, child_mask,
     return ref.treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k, child_mask)
 
 
+def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
+                   child_mask: jax.Array, ext_ids: jax.Array,
+                   node_mask: jax.Array, offset: jax.Array, ext: jax.Array,
+                   weights: Tuple[jax.Array, ...],
+                   impl: str = "auto") -> jax.Array:
+    """One fused batching task: gather child rows out of ``buf``, run
+    the declared gate math VMEM-resident, block-write rows
+    ``[offset, offset+M)`` in place (kernels/level_megastep.py).
+
+    ``kind``/``weights`` come from the cell's ``GateSpec``.  The pallas
+    backend is a single launch with the buffer aliased input→output;
+    the fallback is the op-by-op oracle in ``ref.py`` (same math, same
+    contiguous-block write, no fusion guarantee).
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels import level_megastep as lm
+        if kind == "lstm":
+            wh, b = weights
+            return lm.lstm_megastep(buf, child_ids, ext_ids, node_mask,
+                                    offset, ext, wh, b,
+                                    interpret=_interpret())
+        if kind == "treelstm":
+            ui, uf, uo, uu, b = weights
+            return lm.treelstm_megastep(buf, child_ids, ext_ids, node_mask,
+                                        offset, ext, ui, uf, uo, uu, b,
+                                        interpret=_interpret())
+        raise ValueError(f"unknown megastep gate kind: {kind!r}")
+    return ref.level_megastep(kind, buf, child_ids, child_mask, ext_ids,
+                              node_mask, offset, ext, weights)
+
+
 # ---------------------------------------------------------------------------
 # Cavs primitives
 # ---------------------------------------------------------------------------

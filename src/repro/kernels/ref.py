@@ -243,6 +243,51 @@ def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     return y.astype(x.dtype), s
 
 
+def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
+                   child_mask: jax.Array, ext_ids: jax.Array,
+                   node_mask: jax.Array, offset: jax.Array, ext: jax.Array,
+                   weights: Tuple[jax.Array, ...]) -> jax.Array:
+    """Oracle for ``kernels/level_megastep.py``: one batching task as
+    gather (``jnp.take``) → cell math → contiguous block scatter
+    (``dynamic_update_slice``), returning the updated buffer.
+
+    Semantically identical to the Pallas megastep; this is also the
+    portable forward the scheduler's fused path lowers to off-TPU.
+    """
+    M, A = child_ids.shape
+    S = buf.shape[1]
+    child = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
+    rows = jnp.take(ext, ext_ids, axis=0)
+    nm = node_mask.astype(buf.dtype)[:, None]
+    if kind == "lstm":
+        wh, b = weights
+        H = wh.shape[0]
+        prev = child[:, 0, :]
+        gates = rows + prev[:, H:] @ wh + b
+        c, h = lstm_gates(gates, prev[:, :H])
+        state = jnp.concatenate([c, h], axis=-1)
+    elif kind == "treelstm":
+        ui, uf, uo, uu, b = weights
+        H = ui.shape[0]
+        mk = child_mask.astype(buf.dtype)[..., None]
+        cs = child * mk
+        c_k, h_k = cs[..., :H], cs[..., H:]
+        h_sum = jnp.sum(h_k, axis=1)
+        xi, xf, xo, xu = jnp.split(rows, 4, axis=-1)
+        bi, bf, bo, bu = jnp.split(b, 4)
+        c, h = treelstm_gates(
+            xi + h_sum @ ui + bi,
+            xf[:, None, :] + jnp.einsum("mah,hg->mag", h_k, uf) + bf,
+            xo + h_sum @ uo + bo,
+            xu + h_sum @ uu + bu,
+            c_k, child_mask.astype(buf.dtype))
+        state = jnp.concatenate([c, h], axis=-1)
+    else:
+        raise ValueError(f"unknown megastep gate kind: {kind!r}")
+    return jax.lax.dynamic_update_slice(
+        buf, (state * nm).astype(buf.dtype), (offset, 0))
+
+
 def lstm_level_fused(h_prev, c_prev, ext_proj, wh, b):
     """Oracle for kernels/level_step.py: recurrent matmul + LSTM cell."""
     H = h_prev.shape[1]

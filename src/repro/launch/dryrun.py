@@ -227,7 +227,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()      # raw XLA numbers (see caveat)
+        # raw XLA numbers, list/dict-normalized (see caveat)
+        from repro.analysis.hlo_cost import xla_cost_dict
+        cost = xla_cost_dict(compiled)
         hlo_text = compiled.as_text()
 
         tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"

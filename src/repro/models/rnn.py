@@ -22,7 +22,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex import VertexIO, VertexOutput
+from repro.core.vertex import GateSpec, VertexIO, VertexOutput
 
 Params = Dict[str, Any]
 
@@ -65,6 +65,13 @@ class LSTMVertex:
     def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
         """Eager prefix (Cavs Def. 1): depends on no other vertex."""
         return raw @ params["wx"]
+
+    def gate_spec(self) -> GateSpec:
+        """Fusable-gate declaration: lets the scheduler run each
+        batching task as ONE fused megastep launch (gather + recurrent
+        matmul + gates + block scatter, ``kernels/level_megastep.py``)."""
+        return GateSpec(kind="lstm", hidden=self.hidden,
+                        weight_names=("wh", "b"))
 
     def apply(self, params: Params, io: VertexIO) -> VertexOutput:
         h = self.hidden

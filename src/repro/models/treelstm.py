@@ -16,7 +16,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex import VertexIO, VertexOutput
+from repro.core.vertex import GateSpec, VertexIO, VertexOutput
 
 Params = Dict[str, Any]
 
@@ -62,6 +62,13 @@ class TreeLSTMVertex:
     def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
         """Eager prefix: ``x @ [W_i W_f W_o W_u]`` — Fig. 7's `pull` branch."""
         return raw @ params["wx"]
+
+    def gate_spec(self) -> GateSpec:
+        """Fusable-gate declaration: each batching task runs as ONE
+        fused megastep launch that walks the ``A`` children on an inner
+        grid axis (``kernels/level_megastep.py``)."""
+        return GateSpec(kind="treelstm", hidden=self.hidden,
+                        weight_names=("ui", "uf", "uo", "uu", "b"))
 
     def apply(self, params: Params, io: VertexIO) -> VertexOutput:
         h = self.hidden

@@ -1,0 +1,221 @@
+"""Fused level-megastep equivalences (no hypothesis dependency — this
+file must always collect and run):
+
+  - fused ``execute``/``execute_lazy`` ≡ the op-by-op scan ≡
+    ``execute_serial`` on forward states, for var-length chains (LSTM)
+    and random binary trees / multi-parent DAGs (Tree-LSTM);
+  - fused custom-VJP gradients (params AND external) ≡ grad through the
+    unfused scan, to 1e-4;
+  - the Pallas kernels (interpret mode) ≡ the ``ref.py`` oracle on a
+    single batching task, including sentinel children, masked slots and
+    in-place preservation of all untouched buffer rows;
+  - ``fusion_mode`` plumbing: "none" vs "megastep" vs "auto", and the
+    required-fusion error for cells without a GateSpec.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import (execute, execute_lazy, execute_serial,
+                                  readout_nodes, readout_roots)
+from repro.core.structure import (chain, pack_batch, pack_external,
+                                  random_binary_tree, random_dag)
+from repro.kernels import level_megastep as lm
+from repro.kernels import ref
+from repro.models.rnn import LSTMVertex
+from repro.models.treelstm import TreeFCVertex, TreeLSTMVertex
+
+
+def _case(kind, seed, input_dim=6, hidden=5):
+    rng = np.random.default_rng(seed)
+    if kind == "lstm":
+        fn = LSTMVertex(input_dim=input_dim, hidden=hidden)
+        graphs = [chain(int(n)) for n in rng.integers(1, 12, size=4)]
+    elif kind == "treelstm":
+        fn = TreeLSTMVertex(input_dim=input_dim, hidden=hidden, arity=2)
+        graphs = [random_binary_tree(int(n), rng)
+                  for n in rng.integers(1, 10, size=4)]
+    else:  # multi-parent DAGs (Fig. 2d) through the N-ary cell
+        fn = TreeLSTMVertex(input_dim=input_dim, hidden=hidden, arity=3)
+        graphs = [random_dag(int(n), rng, max_arity=3)
+                  for n in rng.integers(2, 12, size=3)]
+    params = fn.init(jax.random.PRNGKey(seed))
+    arity = max(max(g.max_arity for g in graphs), fn.arity, 1)
+    sched = pack_batch(graphs, pad_arity=arity)
+    inputs = [rng.standard_normal((g.num_nodes, input_dim)).astype(np.float32)
+              * 0.3 for g in graphs]
+    ext = jnp.asarray(pack_external(inputs, sched, input_dim))
+    return fn, params, graphs, inputs, sched, ext
+
+
+KINDS = ["lstm", "treelstm", "dag"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_forward_equals_unfused_and_serial(kind, seed):
+    fn, params, graphs, inputs, sched, ext = _case(kind, seed)
+    dev = sched.to_device()
+    r_un = execute(fn, params, dev, ext, fusion_mode="none")
+    r_fu = execute(fn, params, dev, ext, fusion_mode="megastep")
+    np.testing.assert_allclose(np.asarray(r_fu.buf), np.asarray(r_un.buf),
+                               rtol=1e-4, atol=1e-5)
+    nodes = np.asarray(readout_nodes(r_fu.buf, dev))
+    serial = execute_serial(fn, params, graphs, inputs)
+    for k, g in enumerate(graphs):
+        np.testing.assert_allclose(nodes[k, : g.num_nodes], serial[k],
+                                   rtol=2e-5, atol=2e-5)
+    # the sentinel row is never written by any megastep
+    np.testing.assert_array_equal(np.asarray(r_fu.buf[-1]), 0.0)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_grads_equal_unfused(kind, seed):
+    """The fused custom VJP (scatter-add sweep + flat lazy param pass)
+    must match grad-through-scan on params and external inputs."""
+    fn, params, _, _, sched, ext = _case(kind, seed)
+    dev = sched.to_device()
+
+    def loss(p, e, mode):
+        r = execute(fn, p, dev, e, fusion_mode=mode)
+        return jnp.sum(readout_roots(r.buf, dev) ** 2)
+
+    g_un = jax.grad(lambda p, e: loss(p, e, "none"), (0, 1))(params, ext)
+    g_fu = jax.grad(lambda p, e: loss(p, e, "megastep"), (0, 1))(params, ext)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5), g_un, g_fu)
+
+
+@pytest.mark.parametrize("kind", ["lstm", "treelstm"])
+def test_fused_lazy_matches_opbyop_lazy(kind):
+    fn, params, _, _, sched, ext = _case(kind, 5)
+    dev = sched.to_device()
+    b_un = execute_lazy(fn, params, ext, dev, fusion_mode="none")
+    b_fu = execute_lazy(fn, params, ext, dev, fusion_mode="megastep")
+    np.testing.assert_allclose(np.asarray(b_fu), np.asarray(b_un),
+                               rtol=1e-4, atol=1e-5)
+
+    def loss(p, e, mode):
+        return jnp.sum(readout_roots(
+            execute_lazy(fn, p, e, dev, fusion_mode=mode), dev) ** 2)
+
+    g_un = jax.grad(lambda p, e: loss(p, e, "none"), (0, 1))(params, ext)
+    g_fu = jax.grad(lambda p, e: loss(p, e, "megastep"), (0, 1))(params, ext)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5), g_un, g_fu)
+
+
+def test_fused_jit_roundtrip():
+    """The fused path must trace/jit cleanly (scan-carried buffer)."""
+    fn, params, _, _, sched, ext = _case("treelstm", 7)
+    dev = sched.to_device()
+    f = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                     fusion_mode="megastep").buf)
+    g = jax.jit(lambda p, e: execute(fn, p, dev, e, fusion_mode="none").buf)
+    np.testing.assert_allclose(np.asarray(f(params, ext)),
+                               np.asarray(g(params, ext)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode) vs ref oracle
+# ---------------------------------------------------------------------------
+
+def _level_fixture(seed, M=6, H=8, T=4, A=1, n_ext=10):
+    rng = np.random.default_rng(seed)
+    S = 2 * H
+    buf = rng.standard_normal((T * M + 1, S)).astype(np.float32)
+    buf[-1] = 0.0                                 # sentinel row
+    t = 2
+    cids = rng.integers(0, t * M, size=(M, A)).astype(np.int32)
+    cids[0, -1] = T * M                           # one sentinel child
+    cmask = (cids != T * M).astype(np.float32)
+    eids = rng.integers(0, n_ext, size=(M,)).astype(np.int32)
+    ext = rng.standard_normal((n_ext + 1, 4 * H)).astype(np.float32)
+    nm = np.ones((M,), np.float32)
+    nm[-1] = 0.0                                  # one padded slot
+    return (jnp.asarray(buf), jnp.asarray(cids), jnp.asarray(cmask),
+            jnp.asarray(eids), jnp.asarray(nm), t * M, jnp.asarray(ext), rng)
+
+
+@pytest.mark.parametrize("seed,m,h", [(0, 6, 8), (1, 3, 16), (2, 9, 4)])
+def test_lstm_megastep_kernel_matches_ref(seed, m, h):
+    buf, cids, cmask, eids, nm, off, ext, rng = _level_fixture(seed, M=m, H=h)
+    wh = jnp.asarray(rng.standard_normal((h, 4 * h)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4 * h,)) * 0.1, jnp.float32)
+    out_p = lm.lstm_megastep(buf, cids, eids, nm, jnp.int32(off), ext, wh, b,
+                             interpret=True)
+    out_r = ref.level_megastep("lstm", buf, cids, cmask, eids, nm, off, ext,
+                               (wh, b))
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6)
+    # in-place alias: every row outside [off, off+m) is preserved bit-exact
+    np.testing.assert_array_equal(np.asarray(out_p[:off]),
+                                  np.asarray(buf[:off]))
+    np.testing.assert_array_equal(np.asarray(out_p[off + m:]),
+                                  np.asarray(buf[off + m:]))
+
+
+@pytest.mark.parametrize("seed,m,h,a", [(0, 6, 8, 2), (1, 5, 4, 3)])
+def test_treelstm_megastep_kernel_matches_ref(seed, m, h, a):
+    buf, cids, cmask, eids, nm, off, ext, rng = _level_fixture(
+        seed, M=m, H=h, A=a)
+    ws = [jnp.asarray(rng.standard_normal((h, h)) * 0.2, jnp.float32)
+          for _ in range(4)]
+    b = jnp.asarray(rng.standard_normal((4 * h,)) * 0.1, jnp.float32)
+    out_p = lm.treelstm_megastep(buf, cids, eids, nm, jnp.int32(off), ext,
+                                 *ws, b, interpret=True)
+    out_r = ref.level_megastep("treelstm", buf, cids, cmask, eids, nm, off,
+                               ext, tuple(ws) + (b,))
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(out_p[:off]),
+                                  np.asarray(buf[:off]))
+
+
+def test_scheduler_pallas_megastep_matches_unfused(monkeypatch):
+    """End-to-end: the scheduler's fused scan with the PALLAS backend
+    (interpret mode on CPU) ≡ the unfused op-by-op scan."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    fn, params, _, _, sched, ext = _case("treelstm", 11, input_dim=4,
+                                         hidden=4)
+    dev = sched.to_device()
+    r_fu = execute(fn, params, dev, ext, fusion_mode="megastep")
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "chunked")
+    r_un = execute(fn, params, dev, ext, fusion_mode="none")
+    np.testing.assert_allclose(np.asarray(r_fu.buf), np.asarray(r_un.buf),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fusion_mode plumbing
+# ---------------------------------------------------------------------------
+
+def test_fusion_mode_auto_uses_megastep_and_env_disables(monkeypatch):
+    fn, params, _, _, sched, ext = _case("lstm", 13)
+    dev = sched.to_device()
+    r_auto = execute(fn, params, dev, ext)                  # default: auto
+    monkeypatch.setenv("REPRO_FUSION", "none")
+    r_env_off = execute(fn, params, dev, ext)
+    np.testing.assert_allclose(np.asarray(r_auto.buf),
+                               np.asarray(r_env_off.buf),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fusion_mode_megastep_requires_gate_spec():
+    fn = TreeFCVertex(input_dim=2, hidden=3)
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch([chain(3)], pad_arity=2)
+    ext = jnp.asarray(pack_external([np.ones((3, 2), np.float32)], sched, 2))
+    dev = sched.to_device()
+    with pytest.raises(ValueError, match="GateSpec"):
+        execute(fn, params, dev, ext, fusion_mode="megastep")
+    # hoist=False also disqualifies the fused path
+    fn2 = LSTMVertex(input_dim=2, hidden=3)
+    with pytest.raises(ValueError, match="hoist"):
+        execute(fn2, fn2.init(jax.random.PRNGKey(0)), dev,
+                jnp.zeros((4, 2)), hoist=False, fusion_mode="megastep")

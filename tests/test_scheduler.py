@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core.scheduler import (execute, execute_lazy, execute_serial,
                                   readout_nodes, readout_roots)

@@ -3,7 +3,8 @@ children live at strictly earlier levels, sentinel never read unmasked."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core.structure import (BucketSpec, InputGraph,
                                   balanced_binary_tree, chain, fit_bucket,
