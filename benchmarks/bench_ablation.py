@@ -46,8 +46,12 @@ from repro.kernels.level_megastep import level_traffic_bytes
 def setup(model: str, bs: int, hidden: int, rng):
     m = get_paper_model(model)
     fn = m.make_vertex(hidden=hidden, input_dim=64)
-    graphs = m.make_graphs(bs, rng=rng) if model != "fixed_lstm" \
-        else m.make_graphs(bs, steps=32)
+    if model == "fixed_lstm":
+        graphs = m.make_graphs(bs, steps=32)
+    elif model == "tree_fc":
+        graphs = m.make_graphs(bs, leaves=64, rng=rng)   # CI-sized trees
+    else:
+        graphs = m.make_graphs(bs, rng=rng)
     params = fn.init(jax.random.PRNGKey(0))
     sched = pack_batch(graphs, pad_arity=max(fn.arity, 1))
     inputs = [rng.standard_normal((g.num_nodes, 64)).astype(np.float32)
@@ -135,7 +139,7 @@ def bench(col: Collector, models, bs: int = 32, hidden: int = 64):
             # per batching task (the fused path is ONE pallas launch by
             # construction; unfused = measured while-body census).
             per_level = max(1, launches - 2) / max(1, dev.T)
-            S, H, A = 2 * spec.hidden, spec.hidden, dev.A
+            S, H, A = spec.state_dim, spec.hidden, dev.A
             b_un = level_traffic_bytes(spec.kind, dev.M, A, S, H,
                                        fused=False)
             b_fu = level_traffic_bytes(spec.kind, dev.M, A, S, H,
@@ -158,10 +162,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     col = Collector()
     if args.full:
-        bench(col, models=("fixed_lstm", "tree_lstm", "graph_rnn"), bs=64,
-              hidden=256)
+        bench(col, models=("fixed_lstm", "tree_lstm", "tree_fc",
+                           "graph_rnn"), bs=64, hidden=256)
     else:
-        bench(col, models=("tree_lstm", "graph_rnn"), bs=16, hidden=64)
+        bench(col, models=("tree_lstm", "tree_fc", "graph_rnn"), bs=16,
+              hidden=64)
     return col
 
 

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Collector, time_fn
+from benchmarks.common import Collector, time_fn, time_stats
 from repro.configs.paper import get_paper_model
 from repro.core.scheduler import execute, execute_serial
 from repro.core.structure import pack_batch, pack_external
@@ -33,11 +33,20 @@ def bench(col: Collector, bs_list, leaves_list, hidden: int = 64):
         for leaves in leaves_list:
             fn, params, sched, graphs, inputs, ext = setup(bs, hidden, leaves)
             dev = sched.to_device()
-            run = jax.jit(lambda p, e: execute(fn, p, dev, e).buf)
-            t_b = time_fn(lambda: run(params, ext))
-            col.add("tree_fc/batched", t_b * 1e3, "ms",
-                    f"bs={bs} leaves={leaves} h={hidden} "
-                    f"T={sched.T} M={sched.M}")
+            det = f"bs={bs} leaves={leaves} h={hidden} T={sched.T} M={sched.M}"
+            run = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                               fusion_mode="none").buf)
+            st_un = time_stats(lambda: run(params, ext))
+            t_b = st_un["p50_ms"] / 1e3
+            col.add_time("tree_fc/batched", st_un, det)
+            run_fu = jax.jit(lambda p, e: execute(fn, p, dev, e,
+                                                  fusion_mode="megastep").buf)
+            st_fu = time_stats(lambda: run_fu(params, ext))
+            col.add_time("tree_fc/megastep", st_fu, det)
+            col.add("tree_fc/megastep_speedup",
+                    st_un["p50_ms"] / st_fu["p50_ms"], "x",
+                    f"bs={bs} leaves={leaves} (fused treefc megastep vs "
+                    f"op-by-op; CPU wall-clock advisory)")
             t_s = time_fn(
                 lambda: execute_serial(fn, params, graphs[:1], inputs[:1]),
                 warmup=1, iters=2) * bs

@@ -1,0 +1,88 @@
+"""Compare fresh ``BENCH_<suite>.json`` records against a baseline dir.
+
+The perf-trajectory gate for CI: ``benchmarks/run.py`` writes one JSON
+per suite with per-row ``p50_ms`` stats; this script matches rows by
+``(suite, name, detail)`` and reports any timed row whose fresh p50
+regressed more than ``--threshold`` (default 20%).
+
+Exit status is 0 with warnings by default (CI shared runners are noisy
+— the warnings are a review signal, not a hard gate); ``--strict``
+exits 1 when regressions are found.
+
+Usage::
+
+    python -m benchmarks.run --out-dir fresh_results
+    python benchmarks/compare.py --baseline results --fresh fresh_results
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+Key = Tuple[str, str, str]
+
+
+def _load(dirname: str) -> Dict[Key, dict]:
+    rows: Dict[Key, dict] = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        for rec in doc.get("rows", []):
+            rows[(doc.get("suite", path), rec["name"],
+                  rec.get("detail", ""))] = rec
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="results",
+                    help="directory with committed BENCH_<suite>.json")
+    ap.add_argument("--fresh", required=True,
+                    help="directory with freshly generated records")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative p50 regression that triggers a warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when regressions are found")
+    args = ap.parse_args(argv)
+
+    base = _load(args.baseline)
+    fresh = _load(args.fresh)
+    if not base:
+        print(f"compare: no baseline records under {args.baseline!r} — "
+              f"nothing to diff")
+        return 0
+    if not fresh:
+        print(f"compare: no fresh records under {args.fresh!r}",
+              file=sys.stderr)
+        return 1
+
+    compared = regressions = missing = 0
+    for key, b in sorted(base.items()):
+        if "p50_ms" not in b:
+            continue                       # structural row, not timed
+        f = fresh.get(key)
+        if f is None or "p50_ms" not in f:
+            missing += 1
+            continue
+        compared += 1
+        ratio = f["p50_ms"] / max(b["p50_ms"], 1e-9)
+        if ratio > 1.0 + args.threshold:
+            regressions += 1
+            suite, name, detail = key
+            print(f"WARNING: {name} [{detail}] p50 {b['p50_ms']:.3f} -> "
+                  f"{f['p50_ms']:.3f} ms ({ratio:.2f}x) in {suite}")
+    print(f"compare: {compared} timed rows diffed, {regressions} regressed "
+          f">{args.threshold:.0%}, {missing} baseline rows missing fresh "
+          f"measurements")
+    if regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,22 +28,25 @@ declares ``project_inputs`` (its vertex-independent prefix, e.g. the
 batched call *before* the sequential region.
 
 Fused megasteps (``fusion_mode``): cells that declare a
-:class:`~repro.core.vertex.GateSpec` can route each batching task
-through ONE fused kernel launch (``kernels/level_megastep.py``) instead
-of gather → apply → scatter as three XLA ops: scalar-prefetched
-``child_ids`` drive the gather DMA, the gate math stays VMEM-resident,
-and the contiguous block write aliases the buffer in place across the
-scan — no per-level HBM round-trip of the ``[M, A, S]`` child states or
-the ``[M, 4H]`` gates.  ``fusion_mode="auto"`` (default; overridable via
-the ``REPRO_FUSION`` env var) fuses whenever the cell supports it;
+:class:`~repro.core.vertex.GateSpec` (the whole zoo: LSTM, GRU,
+Tree-LSTM, Tree-FC) can route each batching task through ONE fused
+kernel launch (``kernels/level_megastep.py``) instead of gather →
+apply → scatter as three XLA ops: scalar-prefetched ``child_ids``
+drive the gather DMA, the gate math stays VMEM-resident, and the
+contiguous block write aliases the buffer in place across the scan —
+no per-level HBM round-trip of the ``[M, A, S]`` child states or the
+``[M, G]`` gate lanes.  ``fusion_mode="auto"`` (default; overridable
+via the ``REPRO_FUSION`` env var) fuses whenever the cell supports it
+(including the fixed-arity check for Tree-FC's concat weight);
 ``"none"`` keeps the op-by-op path (the correctness oracle and ablation
 baseline); ``"megastep"`` requires fusion and raises when unsupported.
 The fused path carries its own custom VJP: the reverse sweep pushes
 state-chain cotangents back with scatter-adds (∂gather = scatter-add,
-§3.4) and the parameter/external gradients are computed lazily in one
-flat batched pass (§3.5) — so both :func:`execute` and
-:func:`execute_lazy` share one backward, with activations recomputed
-from the node buffer (remat).
+§3.4 — on the pallas backend the dedicated kernel in
+``kernels/level_megastep_bwd.py``) and the parameter/external gradients
+are computed lazily in one flat batched pass (§3.5) — so both
+:func:`execute` and :func:`execute_lazy` share one backward, with
+activations recomputed from the node buffer (remat).
 """
 
 from __future__ import annotations
@@ -119,14 +122,16 @@ def _maybe_hoist(fn: VertexFunction, params: Params, external: Array,
 # ---------------------------------------------------------------------------
 
 def _fusion_spec(fn: VertexFunction, fusion_mode: str, *, hoist: bool,
-                 collect_push: bool,
-                 dtype=jnp.float32) -> Optional[GateSpec]:
+                 collect_push: bool, dtype=jnp.float32,
+                 sched_arity: Optional[int] = None) -> Optional[GateSpec]:
     """Resolve the fusion decision: the cell's GateSpec when the fused
     megastep path applies, else ``None`` (op-by-op path).
 
     The fused buffer dtype follows the hoisted projection (float32 for
     every cell in the zoo), so a non-f32 ``dtype`` request falls back
     to the op-by-op path under "auto" and raises under "megastep".
+    Fixed-arity kinds (Tree-FC's concat weight) additionally require the
+    packed schedule's ``A`` to match ``spec.arity`` exactly.
     """
     mode = fusion_mode
     if mode == "auto":
@@ -138,9 +143,17 @@ def _fusion_spec(fn: VertexFunction, fusion_mode: str, *, hoist: bool,
         return None
     spec = get_gate_spec(fn)
     f32 = jnp.dtype(dtype) == jnp.float32
+    arity_ok = (spec is None or spec.arity is None or sched_arity is None
+                or spec.arity == sched_arity)
     ok = (spec is not None and has_eager_projection(fn) and hoist
-          and not collect_push and f32)
+          and not collect_push and f32 and arity_ok)
     if mode == "megastep" and not ok:
+        if spec is not None and not arity_ok:
+            raise ValueError(
+                f"fusion_mode='megastep': {type(fn).__name__} declares a "
+                f"fixed gather arity {spec.arity} but the packed schedule "
+                f"has A={sched_arity} — repack with pad_arity="
+                f"{spec.arity} or use fusion_mode='none'")
         raise ValueError(
             "fusion_mode='megastep' needs a cell with a GateSpec and an "
             "eager projection, hoist=True, collect_push=False and a "
@@ -149,12 +162,24 @@ def _fusion_spec(fn: VertexFunction, fusion_mode: str, *, hoist: bool,
     return spec if ok else None
 
 
+def resolve_fusion(fn: VertexFunction, fusion_mode: str = "auto", *,
+                   hoist: bool = True, collect_push: bool = False,
+                   dtype=jnp.float32,
+                   sched_arity: Optional[int] = None) -> Optional[GateSpec]:
+    """Public fusion resolution (used by ``serve.engine`` and tooling):
+    the GateSpec the fused path will use, or ``None`` for op-by-op —
+    the same decision :func:`execute` makes internally."""
+    return _fusion_spec(fn, fusion_mode, hoist=hoist,
+                        collect_push=collect_push, dtype=dtype,
+                        sched_arity=sched_arity)
+
+
 def _megastep_scan(spec: GateSpec, weights, sched: DeviceSchedule,
                    ext: Array, dtype) -> Array:
     """Forward scan where each batching task is ONE fused megastep: the
     buffer is carried (and, on the pallas backend, aliased) in place."""
     T, M = sched.T, sched.M
-    S = 2 * spec.hidden
+    S = spec.state_dim
     buf0 = jnp.zeros((T * M + 1, S), dtype)
 
     def step(buf, xs):
@@ -196,7 +221,7 @@ def _megastep_bwd(fn, res, g_buf):
     spec = get_gate_spec(fn)
     weights = spec.weights(params)
     T, M, A = sched.T, sched.M, sched.A
-    S = 2 * spec.hidden
+    S = spec.state_dim
     g_buf = g_buf.astype(jnp.float32)
 
     def rev_step(g, xs):
@@ -208,9 +233,11 @@ def _megastep_bwd(fn, res, g_buf):
         rows = jnp.take(ext, ext_ids, axis=0)
         g_child, _, _ = megastep.level_bwd(spec.kind, g_state, child, rows,
                                            child_mask, weights)
-        g = g.at[child_ids.reshape(-1)].add(
-            g_child.reshape(M * A, S).astype(g.dtype), mode="drop",
-            unique_indices=False, indices_are_sorted=False)
+        # ∂gather = scatter-add (§3.4), rendered as the same customized
+        # memcpy kernel family as the forward gather (child-masked rows
+        # pointed at the sentinel contribute exact zeros).
+        g = kops.scatter_add_rows(g, child_ids.reshape(-1),
+                                  g_child.reshape(M * A, S).astype(g.dtype))
         return g, g_state
 
     xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
@@ -260,7 +287,8 @@ def execute(fn: VertexFunction, params: Params, sched: DeviceSchedule,
     module docstring; the fused path returns the same buffer to 1e-4.
     """
     spec = _fusion_spec(fn, fusion_mode, hoist=hoist,
-                        collect_push=collect_push, dtype=dtype)
+                        collect_push=collect_push, dtype=dtype,
+                        sched_arity=sched.A)
     if spec is not None:
         return ExecResult(buf=_execute_megastep(fn, params, external, sched))
     T, M = sched.T, sched.M
@@ -347,7 +375,8 @@ def execute_lazy(fn: VertexFunction, params: Params, external: Array,
     (whose backward is itself lazy-batched); ``"none"`` keeps the
     op-by-op lazy path below as the ablation baseline.
     """
-    spec = _fusion_spec(fn, fusion_mode, hoist=True, collect_push=False)
+    spec = _fusion_spec(fn, fusion_mode, hoist=True, collect_push=False,
+                        sched_arity=sched.A)
     if spec is not None:
         return _execute_megastep(fn, params, external, sched)
     return _execute_lazy_opbyop(fn, params, external, sched)

@@ -118,11 +118,33 @@ class GateSpec:
     gradients back under the same keys.
     """
 
-    #: "lstm" (arity-1, state ``[c|h]``) or "treelstm" (N-ary child-sum,
-    #: state ``[c|h]``; paper Fig. 4).
+    #: Gate-math kind understood by ``kernels/level_megastep.py``:
+    #: "lstm" (arity-1, state ``[c|h]``), "treelstm" (N-ary child-sum,
+    #: state ``[c|h]``; paper Fig. 4), "gru" (arity-1, state ``h``) or
+    #: "treefc" (fixed-arity concat-FC benchmark cell, state ``h``).
     kind: str
     hidden: int
     weight_names: Tuple[str, ...]
+    #: Fixed gather arity required by the kernel, or ``None`` when the
+    #: gate math is arity-agnostic.  "treefc" concatenates the children
+    #: against a ``[arity*H, H]`` weight, so the packed schedule's
+    #: ``A`` must match exactly; the scheduler falls back to the
+    #: op-by-op path (under "auto") when it does not.
+    arity: Optional[int] = None
+
+    _STATE_MULT = {"lstm": 2, "treelstm": 2, "gru": 1, "treefc": 1}
+    _GATE_MULT = {"lstm": 4, "treelstm": 4, "gru": 3, "treefc": 1}
+
+    @property
+    def state_dim(self) -> int:
+        """Width of the scattered state row (``[c|h]`` doubles it)."""
+        return self._STATE_MULT[self.kind] * self.hidden
+
+    @property
+    def gate_dim(self) -> int:
+        """Width of the pulled (eagerly projected) external row — the
+        number of gate lanes times ``hidden``."""
+        return self._GATE_MULT[self.kind] * self.hidden
 
     def weights(self, params: Params) -> Tuple[Array, ...]:
         return tuple(params[n] for n in self.weight_names)

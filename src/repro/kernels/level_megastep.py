@@ -31,7 +31,17 @@ Supported gate kinds (see ``core.vertex.GateSpec``):
     ``[c|h]``, weights ``(ui, uf, uo, uu, b)``.  The kernel walks the
     ``A`` children on an inner grid axis, accumulating ``Σ h_k`` and
     ``Σ f_k·c_k`` in VMEM scratch, and emits the state on the last
-    child step.
+    child step;
+  - ``"gru"``      — arity-1 GRU, state ``h``, weights ``(wh, b)``
+    (3 gate lanes ``z|r|n``; the reset gate multiplies the recurrent
+    candidate term *before* the tanh, so the kernel cannot fold the
+    recurrence into one pre-activation add the way the LSTM does);
+  - ``"treefc"``   — the Tree-FC benchmark cell (paper §5): one FC
+    layer over the *concatenated* child states, weights ``(wc, b)``
+    with ``wc`` of shape ``[A*H, H]``.  The inner grid axis walks the
+    children, accumulating ``h_k @ wc[k*H:(k+1)*H]`` in VMEM scratch
+    (the per-child block of ``wc`` is selected by the BlockSpec index
+    map — the concat never materializes).
 
 VMEM budget: weights dominate — LSTM ``W_h`` f32 ``[H, 4H]`` is 4 MB at
 H=512; Tree-LSTM's four ``[H, H]`` blocks total the same.  Add the
@@ -208,6 +218,125 @@ def treelstm_megastep(buf: Array, child_ids: Array, ext_ids: Array,
       buf, ext, ui, uf, uo, uu, b[None, :])
 
 
+def _gru_kernel(cids_ref, eids_ref, off_ref, nmask_ref,
+                child_ref, ext_ref, wh_ref, b_ref, out_ref, *, H: int):
+    del cids_ref, eids_ref, off_ref
+    m = pl.program_id(0)
+    h_prev = child_ref[...].astype(jnp.float32)              # [1, H]
+    rec = jax.lax.dot_general(
+        h_prev, wh_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b_ref[...].astype(jnp.float32)
+    ext = ext_ref[...].astype(jnp.float32)                   # [1, 3H]
+    z = jax.nn.sigmoid(ext[:, :H] + rec[:, :H])
+    r = jax.nn.sigmoid(ext[:, H: 2 * H] + rec[:, H: 2 * H])
+    n = jnp.tanh(ext[:, 2 * H:] + r * rec[:, 2 * H:])
+    hy = (1.0 - z) * n + z * h_prev
+    nm = nmask_ref[m].astype(jnp.float32)
+    out_ref[...] = (hy * nm).astype(out_ref.dtype)
+
+
+def gru_megastep(buf: Array, child_ids: Array, ext_ids: Array,
+                 node_mask: Array, offset: Array, ext: Array,
+                 wh: Array, b: Array, *, interpret: bool = False) -> Array:
+    """One fused GRU batching task, in place (state ``h``, ``[M, H]``).
+
+    Same launch shape as :func:`lstm_megastep`: scalar-prefetched
+    ``child_ids`` drive the predecessor gather, ``W_h`` stays VMEM
+    resident, the 3 gate lanes never exist in HBM.
+    """
+    M = child_ids.shape[0]
+    H = wh.shape[0]
+    S = buf.shape[1]
+    spec_row = lambda f: pl.BlockSpec((1, S), f)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(M,),
+        in_specs=[
+            spec_row(lambda m, c, e, o, n: (c[m, 0], 0)),            # gather
+            pl.BlockSpec((1, 3 * H), lambda m, c, e, o, n: (e[m], 0)),  # pull
+            pl.BlockSpec((H, 3 * H), lambda m, c, e, o, n: (0, 0)),  # resident
+            pl.BlockSpec((1, 3 * H), lambda m, c, e, o, n: (0, 0)),
+        ],
+        out_specs=spec_row(lambda m, c, e, o, n: (o[0] + m, 0)),     # scatter
+    )
+    return pl.pallas_call(
+        functools.partial(_gru_kernel, H=H),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
+      jnp.reshape(offset, (1,)).astype(jnp.int32),
+      (node_mask > 0).astype(jnp.int32),
+      buf, ext, wh, b[None, :])
+
+
+def _treefc_kernel(cids_ref, eids_ref, off_ref, nmask_ref,
+                   child_ref, ext_ref, wc_ref, b_ref, out_ref, acc_ref,
+                   *, H: int, A: int):
+    del cids_ref, eids_ref, off_ref
+    m, a = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(a == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Child a's slice of the concat-FC: h_k @ wc[a*H:(a+1)*H].  Absent
+    # children gathered the zero sentinel row → contribute exactly 0.
+    h_k = child_ref[...].astype(jnp.float32)                 # [1, H]
+    acc_ref[...] += jax.lax.dot_general(
+        h_k, wc_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(a == A - 1)
+    def _emit():
+        hy = jnp.tanh(acc_ref[...] + ext_ref[...].astype(jnp.float32)
+                      + b_ref[...].astype(jnp.float32))
+        nm = nmask_ref[m].astype(jnp.float32)
+        out_ref[...] = (hy * nm).astype(out_ref.dtype)
+
+
+def treefc_megastep(buf: Array, child_ids: Array, ext_ids: Array,
+                    node_mask: Array, offset: Array, ext: Array,
+                    wc: Array, b: Array, *, interpret: bool = False) -> Array:
+    """One fused Tree-FC batching task, in place.
+
+    Grid ``(M, A)``: the inner axis walks the children of slot ``m``;
+    the index map selects child ``a``'s ``[H, H]`` block of the
+    ``[A*H, H]`` concat weight, so the concatenated child vector never
+    materializes anywhere — not even in VMEM.
+    """
+    M, A = child_ids.shape
+    H = wc.shape[1]
+    if wc.shape[0] != A * H:
+        raise ValueError(f"treefc weight expects A*H={A}*{H} rows, "
+                         f"got {wc.shape[0]}")
+    S = buf.shape[1]
+    spec_row = lambda f: pl.BlockSpec((1, S), f)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(M, A),
+        in_specs=[
+            spec_row(lambda m, a, c, e, o, n: (c[m, a], 0)),          # gather
+            pl.BlockSpec((1, H), lambda m, a, c, e, o, n: (e[m], 0)),
+            pl.BlockSpec((H, H), lambda m, a, c, e, o, n: (a, 0)),    # wc[a]
+            pl.BlockSpec((1, H), lambda m, a, c, e, o, n: (0, 0)),
+        ],
+        out_specs=spec_row(lambda m, a, c, e, o, n: (o[0] + m, 0)),   # scatter
+        scratch_shapes=[pltpu.VMEM((1, H), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_treefc_kernel, H=H, A=A),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
+      jnp.reshape(offset, (1,)).astype(jnp.int32),
+      (node_mask > 0).astype(jnp.int32),
+      buf, ext, wc, b[None, :])
+
+
 # ---------------------------------------------------------------------------
 # Analytic backward of one megastep (jnp; shared by the reverse sweep
 # and the flat lazy parameter-gradient pass)
@@ -243,6 +372,7 @@ def _lstm_bwd(g_state, child, ext_rows, child_mask, weights):
 def _treelstm_bwd(g_state, child, ext_rows, child_mask, weights):
     ui, uf, uo, uu, b = [w.astype(jnp.float32) for w in weights]
     H = ui.shape[0]
+    N, A = child.shape[:2]
     mk = child_mask[..., None].astype(jnp.float32)
     cs = child.astype(jnp.float32) * mk
     c_k, h_k = cs[..., :H], cs[..., H:]
@@ -251,8 +381,10 @@ def _treelstm_bwd(g_state, child, ext_rows, child_mask, weights):
     xi, xf, xo, xu = jnp.split(ext_rows, 4, axis=-1)
     bi, bf, bo, bu = jnp.split(b, 4)
     i = jax.nn.sigmoid(xi + h_sum @ ui + bi)
-    f = jax.nn.sigmoid(xf[:, None, :] + jnp.einsum("nah,hg->nag", h_k, uf)
-                       + bf)
+    # Per-child recurrences as flattened [N*A, H] matmuls — the batched
+    # einsum form lowers ~2.5x slower on XLA CPU (docs/benchmarks.md).
+    rec_f = (h_k.reshape(N * A, H) @ uf).reshape(N, A, H)
+    f = jax.nn.sigmoid(xf[:, None, :] + rec_f + bf)
     o = jax.nn.sigmoid(xo + h_sum @ uo + bo)
     u = jnp.tanh(xu + h_sum @ uu + bu)
     c = i * u + jnp.sum(f * c_k * mk, axis=1)
@@ -267,10 +399,48 @@ def _treelstm_bwd(g_state, child, ext_rows, child_mask, weights):
     d_gates = jnp.concatenate(
         [d_i, jnp.sum(d_f, axis=1), d_o, d_u], axis=-1)
     g_h_k = (d_i @ ui.T + d_o @ uo.T + d_u @ uu.T)[:, None, :] \
-        + jnp.einsum("nag,hg->nah", d_f, uf)
+        + (d_f.reshape(N * A, H) @ uf.T).reshape(N, A, H)
     g_c_k = gc[:, None, :] * f
     g_child = jnp.concatenate([g_c_k, g_h_k], axis=-1) * mk
     return g_child, d_gates, (d_i, d_f, d_o, d_u, h_sum, h_k)
+
+
+def _gru_bwd(g_state, child, ext_rows, child_mask, weights):
+    wh, b = weights
+    H = wh.shape[0]
+    h_prev = child[:, 0, :].astype(jnp.float32)              # [N, H]
+    rec = h_prev @ wh.astype(jnp.float32) + b.astype(jnp.float32)
+    ext_rows = ext_rows.astype(jnp.float32)
+    z = jax.nn.sigmoid(ext_rows[:, :H] + rec[:, :H])
+    r = jax.nn.sigmoid(ext_rows[:, H: 2 * H] + rec[:, H: 2 * H])
+    hn = rec[:, 2 * H:]
+    n = jnp.tanh(ext_rows[:, 2 * H:] + r * hn)
+    g_h = g_state.astype(jnp.float32)
+    d_n = g_h * (1.0 - z) * (1.0 - n * n)
+    d_z = g_h * (h_prev - n) * z * (1.0 - z)
+    d_r = d_n * hn * r * (1.0 - r)
+    # Pulled-row cotangent: x lanes enter the pre-activations additively.
+    d_gates = jnp.concatenate([d_z, d_r, d_n], axis=-1)
+    # Recurrent-matmul cotangent: the n lane is gated by r.
+    d_rec = jnp.concatenate([d_z, d_r, d_n * r], axis=-1)
+    g_h_prev = g_h * z + d_rec @ wh.astype(jnp.float32).T
+    g_child = g_h_prev[:, None, :] * child_mask[..., None]
+    return g_child, d_gates, (h_prev, d_rec)
+
+
+def _treefc_bwd(g_state, child, ext_rows, child_mask, weights):
+    wc, b = weights
+    H = wc.shape[1]
+    A = child.shape[1]
+    mk = child_mask[..., None].astype(jnp.float32)
+    h_k = child.astype(jnp.float32) * mk                     # [N, A, H]
+    N = h_k.shape[0]
+    pre = (h_k.reshape(N, A * H) @ wc.astype(jnp.float32)
+           + ext_rows.astype(jnp.float32) + b.astype(jnp.float32))
+    hy = jnp.tanh(pre)
+    d_pre = g_state.astype(jnp.float32) * (1.0 - hy * hy)    # [N, H]
+    g_child = (d_pre @ wc.astype(jnp.float32).T).reshape(N, A, H) * mk
+    return g_child, d_pre, (h_k,)
 
 
 def level_bwd(kind: str, g_state: Array, child: Array, ext_rows: Array,
@@ -288,7 +458,8 @@ def level_bwd(kind: str, g_state: Array, child: Array, ext_rows: Array,
     pulled-row cotangent (∂pull = push); ``aux`` feeds
     :func:`level_param_grads`.
     """
-    fn = {"lstm": _lstm_bwd, "treelstm": _treelstm_bwd}.get(kind)
+    fn = {"lstm": _lstm_bwd, "treelstm": _treelstm_bwd,
+          "gru": _gru_bwd, "treefc": _treefc_bwd}.get(kind)
     if fn is None:
         raise ValueError(f"unknown megastep gate kind: {kind!r}")
     return fn(g_state, child, ext_rows, child_mask, weights)
@@ -308,14 +479,26 @@ def level_param_grads(kind: str, d_gates: Array, aux: Tuple[Array, ...],
             jnp.sum(d_gates, axis=0)
     if kind == "treelstm":
         d_i, d_f, d_o, d_u, h_sum, h_k = aux
+        N, A, H = h_k.shape
         return (h_sum.T @ d_i,
-                jnp.einsum("nah,nag->hg", h_k, d_f),
+                h_k.reshape(N * A, H).T @ d_f.reshape(N * A, H),
                 h_sum.T @ d_o,
                 h_sum.T @ d_u,
                 jnp.concatenate([jnp.sum(d_i, axis=0),
                                  jnp.sum(d_f, axis=(0, 1)),
                                  jnp.sum(d_o, axis=0),
                                  jnp.sum(d_u, axis=0)]))
+    if kind == "gru":
+        h_prev, d_rec = aux
+        wh, _ = weights
+        return (h_prev.T @ d_rec).astype(wh.dtype), \
+            jnp.sum(d_rec, axis=0)
+    if kind == "treefc":
+        (h_k,) = aux
+        wc, _ = weights
+        N, A, H = h_k.shape
+        return (h_k.reshape(N, A * H).T @ d_gates).astype(wc.dtype), \
+            jnp.sum(d_gates, axis=0)
     raise ValueError(f"unknown megastep gate kind: {kind!r}")
 
 
@@ -329,14 +512,15 @@ def level_traffic_bytes(kind: str, M: int, A: int, S: int, H: int,
 
     Unfused (gather → F → scatter as separate XLA ops), per level:
     the gather writes+rereads ``[M, A, S]``, the ext pull writes+rereads
-    ``[M, 4H]``, the dot roots the fusion so the ``[M, 4H]`` gate tensor
+    the ``[M, G]`` gate lanes (``G`` = 4H LSTM-family, 3H GRU, H
+    Tree-FC), the dot roots the fusion so the ``[M, G]`` gate tensor
     round-trips, and the state is written then re-read by the
     ``dynamic_update_slice``.  Fused: child rows and ext rows are read
     ONCE (HBM→VMEM) and the state block is written once — every
     intermediate lives in VMEM/registers.  Weight traffic is identical
     (resident either way under scan) and excluded.
     """
-    g = 4 * H
+    g = {"lstm": 4, "treelstm": 4, "gru": 3, "treefc": 1}[kind] * H
     read_children = M * A * S
     read_ext = M * g
     write_state = M * S

@@ -1,0 +1,100 @@
+"""Pallas scatter-ADD — the megastep reverse sweep's memory op (§3.4).
+
+The fused backward propagates state-chain cotangents level by level:
+for each batching task the analytic gate backward
+(``level_megastep.level_bwd``) turns the ``[M, S]`` state cotangent into
+``[M*A, S]`` child-row cotangents, which must be ADDED into the buffer
+cotangent at the (scalar) ``child_ids`` — ∂gather = scatter-add.  The
+op-by-op path leaves this to XLA's ``.at[].add`` (a generic scatter);
+here it is rendered as the same kind of customized memcpy kernel as
+``gather_scatter.py``, completing the Cavs primitive set:
+
+  gather        → ``gather_scatter.gather_rows``   (fwd)
+  scatter       → ``gather_scatter.scatter_rows``  (fwd, unique rows)
+  ∂gather       → ``scatter_add_rows``             (bwd, duplicates OK)
+
+Unlike ``scatter_rows``, indices here may REPEAT: a vertex gathered by
+several parents in one level (multi-parent DAGs, Fig. 2d) receives one
+cotangent contribution per parent.  A grid-over-rows kernel whose output
+index map revisits the same block is a read-after-write hazard under the
+double-buffered pipeline, so this kernel inverts the layout instead:
+
+  * the grid walks **column stripes** of the destination — each output
+    block is visited exactly once (no revisit hazard, alias-safe);
+  * within a stripe the destination lives whole in VMEM and a
+    ``fori_loop`` accumulates the ``n`` row cotangents sequentially via
+    scalar-prefetched ``idx`` (``idx`` is in SMEM before the grid
+    starts, the same discipline that drives the gather DMA forward) —
+    duplicate indices are correct by construction and deterministic.
+
+VMEM budget per stripe: ``(R + n) * block_d * 4`` bytes — at the
+largest paper config (``R = T*M + 1 ≈ 8k`` rows, ``n = M*A ≈ 512``,
+``block_d = 512``) about 17 MB, so tighter configs should lower
+``block_d`` (128 → ~4.3 MB); the row adds are VPU work either way.
+The jnp oracle (``ref.scatter_add_rows``) stays the interpret-mode and
+CPU ground truth; ``ops.scatter_add_rows`` dispatches between them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _scatter_add_kernel(idx_ref, dst_ref, rows_ref, out_ref, *, n: int):
+    # One column stripe: seed with the current cotangent, then fold in
+    # every row contribution in order (duplicate indices accumulate).
+    out_ref[...] = dst_ref[...]
+
+    def body(i, _):
+        r = idx_ref[i]
+        out_ref[pl.ds(r, 1), :] += rows_ref[pl.ds(i, 1), :]
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array, *,
+                     block_d: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """``dst``: ``[R, D]``; ``idx``: ``[n]`` int32 in ``[0, R)`` (repeats
+    allowed); ``rows``: ``[n, D]`` → ``dst`` with ``rows[i]`` added at
+    ``idx[i]`` (functional; the dst buffer is aliased in place).
+
+    Masked contributions must arrive as zero rows pointed at a sentinel
+    index — exactly what ``level_bwd``'s child-mask produces — since,
+    unlike ``ref.scatter_add_rows(mode="drop")``, nothing is dropped.
+    """
+    R, D = dst.shape
+    n = idx.shape[0]
+    bd = min(block_d, _round_up(D, 128))
+    Dp = _round_up(D, bd)
+    dstp = jnp.pad(dst, ((0, 0), (0, Dp - D)))
+    rowsp = jnp.pad(rows.astype(dst.dtype), ((0, 0), (0, Dp - D)))
+
+    stripe = lambda shape: pl.BlockSpec(shape, lambda j, i_ref: (0, j))  # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Dp // bd,),
+        in_specs=[
+            stripe((R, bd)),                      # dst (alias seed)
+            stripe((n, bd)),                      # row cotangents
+        ],
+        out_specs=stripe((R, bd)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_scatter_add_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Dp), dst.dtype),
+        input_output_aliases={1: 0},   # dst (first tensor operand) → out
+        interpret=interpret,
+    )(idx.astype(jnp.int32), dstp, rowsp)
+    return out[:, :D]

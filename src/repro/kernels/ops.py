@@ -101,9 +101,33 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
             return lm.treelstm_megastep(buf, child_ids, ext_ids, node_mask,
                                         offset, ext, ui, uf, uo, uu, b,
                                         interpret=_interpret())
+        if kind == "gru":
+            wh, b = weights
+            return lm.gru_megastep(buf, child_ids, ext_ids, node_mask,
+                                   offset, ext, wh, b,
+                                   interpret=_interpret())
+        if kind == "treefc":
+            wc, b = weights
+            return lm.treefc_megastep(buf, child_ids, ext_ids, node_mask,
+                                      offset, ext, wc, b,
+                                      interpret=_interpret())
         raise ValueError(f"unknown megastep gate kind: {kind!r}")
     return ref.level_megastep(kind, buf, child_ids, child_mask, ext_ids,
                               node_mask, offset, ext, weights)
+
+
+def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
+                     impl: str = "auto") -> jax.Array:
+    """``dst[idx[i]] += rows[i]`` with repeats — ∂gather = scatter-add
+    (§3.4), the megastep reverse sweep's memory op.  The pallas backend
+    (kernels/level_megastep_bwd.py) is a column-striped accumulate with
+    the dst buffer aliased in place; the fallback is XLA's scatter-add.
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels import level_megastep_bwd as lmb
+        return lmb.scatter_add_rows(dst, idx, rows, interpret=_interpret())
+    return ref.scatter_add_rows(dst, idx, rows)
 
 
 # ---------------------------------------------------------------------------

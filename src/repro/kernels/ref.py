@@ -55,6 +55,15 @@ def scatter_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
     return dst.at[idx].set(rows, mode="drop", unique_indices=True)
 
 
+def scatter_add_rows(dst: jax.Array, idx: jax.Array,
+                     rows: jax.Array) -> jax.Array:
+    """``dst[idx[i]] += rows[i]`` (duplicates accumulate) — the
+    transpose of ``gather_rows``: ∂gather = scatter-add (Cavs §3.4).
+    Oracle for ``kernels/level_megastep_bwd.scatter_add_rows``."""
+    return dst.at[idx].add(rows, mode="drop", unique_indices=False,
+                           indices_are_sorted=False)
+
+
 # ---------------------------------------------------------------------------
 # Attention (GQA / SWA / causal / cross) — transformer hot-spot
 # ---------------------------------------------------------------------------
@@ -275,13 +284,31 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
         h_sum = jnp.sum(h_k, axis=1)
         xi, xf, xo, xu = jnp.split(rows, 4, axis=-1)
         bi, bf, bo, bu = jnp.split(b, 4)
+        # Per-child recurrence as a flattened [M*A, H] matmul: XLA CPU
+        # lowers the batched einsum form ~2.5x slower (measured; see
+        # docs/benchmarks.md "CPU fused Tree-LSTM" note).
+        rec_f = (h_k.reshape(M * A, H) @ uf).reshape(M, A, H)
         c, h = treelstm_gates(
             xi + h_sum @ ui + bi,
-            xf[:, None, :] + jnp.einsum("mah,hg->mag", h_k, uf) + bf,
+            xf[:, None, :] + rec_f + bf,
             xo + h_sum @ uo + bo,
             xu + h_sum @ uu + bu,
             c_k, child_mask.astype(buf.dtype))
         state = jnp.concatenate([c, h], axis=-1)
+    elif kind == "gru":
+        wh, b = weights
+        H = wh.shape[0]
+        h_prev = child[:, 0, :]
+        rec = h_prev @ wh + b
+        z = jax.nn.sigmoid(rows[:, :H] + rec[:, :H])
+        r = jax.nn.sigmoid(rows[:, H: 2 * H] + rec[:, H: 2 * H])
+        n = jnp.tanh(rows[:, 2 * H:] + r * rec[:, 2 * H:])
+        state = (1.0 - z) * n + z * h_prev
+    elif kind == "treefc":
+        wc, b = weights
+        mk = child_mask.astype(buf.dtype)[..., None]
+        cs = (child * mk).reshape(M, -1)                 # [M, A*H] concat
+        state = jnp.tanh(cs @ wc + rows + b)
     else:
         raise ValueError(f"unknown megastep gate kind: {kind!r}")
     return jax.lax.dynamic_update_slice(

@@ -23,13 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vertex import GateSpec, VertexIO, VertexOutput
+from repro.models.layers import dense_init as _dense_init
 
 Params = Dict[str, Any]
-
-
-def _dense_init(rng, in_dim: int, out_dim: int, scale: float | None = None):
-    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
-    return jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +120,13 @@ class GRUVertex:
 
     def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
         return raw @ params["wx"]
+
+    def gate_spec(self) -> GateSpec:
+        """Fusable-gate declaration (kind "gru"): one fused megastep
+        launch per batching task — the 3 gate lanes (``z|r|n``, reset
+        gate applied inside the candidate tanh) never leave VMEM."""
+        return GateSpec(kind="gru", hidden=self.hidden,
+                        weight_names=("wh", "b"))
 
     def apply(self, params: Params, io: VertexIO) -> VertexOutput:
         h = self.hidden

@@ -17,12 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vertex import GateSpec, VertexIO, VertexOutput
+from repro.models.layers import dense_init as _dense_init
 
 Params = Dict[str, Any]
-
-
-def _dense_init(rng, in_dim: int, out_dim: int):
-    return jax.random.normal(rng, (in_dim, out_dim), jnp.float32) / jnp.sqrt(in_dim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,25 +73,28 @@ class TreeLSTMVertex:
         bi, bf, bo, bu = jnp.split(params["b"], 4)
 
         # Fig. 4 L2-6: gather children, split into (c_k, h_k), child-sum h.
+        M, A = io.num_slots, io.arity
         cs = io.child_states * io.child_mask[..., None]       # [M, A, 2H]
         c_k, h_k = cs[..., :h], cs[..., h:]
         h_sum = jnp.sum(h_k, axis=1)                          # Σ_k h_k
+        # Per-child forget recurrence flattened to [M*A, H] @ [H, H]:
+        # the batched-einsum form lowers ~2.5x slower on XLA CPU
+        # (docs/benchmarks.md, "CPU fused Tree-LSTM" note).
+        rec_f = (h_k.reshape(M * A, h) @ params["uf"]).reshape(M, A, h)
 
         if self.cell_impl == "pallas":
             from repro.kernels import ops as kops
             c, hy = kops.treelstm_gates(
                 xi + h_sum @ params["ui"] + bi,
                 # per-child forget pre-activations [M, A, H]:
-                xf[:, None, :] + jnp.einsum("mah,hg->mag", h_k, params["uf"]) + bf,
+                xf[:, None, :] + rec_f + bf,
                 xo + h_sum @ params["uo"] + bo,
                 xu + h_sum @ params["uu"] + bu,
                 c_k, io.child_mask)
         else:
             i = jax.nn.sigmoid(xi + h_sum @ params["ui"] + bi)
             # Fig. 4 L9-11: one forget gate per child against h_k.
-            f = jax.nn.sigmoid(xf[:, None, :]
-                               + jnp.einsum("mah,hg->mag", h_k, params["uf"])
-                               + bf)
+            f = jax.nn.sigmoid(xf[:, None, :] + rec_f + bf)
             o = jax.nn.sigmoid(xo + h_sum @ params["uo"] + bo)
             u = jnp.tanh(xu + h_sum @ params["uu"] + bu)
             c = i * u + jnp.sum(f * c_k * io.child_mask[..., None], axis=1)
@@ -130,6 +130,15 @@ class TreeFCVertex:
 
     def project_inputs(self, params: Params, raw: jax.Array) -> jax.Array:
         return raw @ params["wx"]
+
+    def gate_spec(self) -> GateSpec:
+        """Fusable-gate declaration (kind "treefc").  The concat weight
+        fixes the gather arity, so the fused path only engages when the
+        packed schedule's ``A`` equals ``self.arity`` (the scheduler
+        falls back to op-by-op otherwise under ``fusion_mode="auto"``).
+        """
+        return GateSpec(kind="treefc", hidden=self.hidden,
+                        weight_names=("wc", "b"), arity=self.arity)
 
     def apply(self, params: Params, io: VertexIO) -> VertexOutput:
         M = io.num_slots

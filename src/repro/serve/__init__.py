@@ -1,6 +1,9 @@
-"""Serving substrate: slot-based KV cache + continuous-batching engine."""
+"""Serving substrate: slot-based KV cache + continuous-batching engines
+(transformer decode and the fusion-aware vertex-function decode)."""
 
 from repro.serve.kv_cache import CacheSlots
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (Request, ServeEngine, VertexRequest,
+                                VertexServeEngine)
 
-__all__ = ["CacheSlots", "Request", "ServeEngine"]
+__all__ = ["CacheSlots", "Request", "ServeEngine", "VertexRequest",
+           "VertexServeEngine"]

@@ -15,17 +15,36 @@ data.  Each engine tick:
 
 This mirrors the Var-LSTM experiment (§5.1): variable-length sequences
 batched without recompilation.
+
+Two engines live here:
+
+  - :class:`ServeEngine` — transformer-style decode over a KV-cache
+    slot pool (prompt lengths bucketed to powers of two so admission
+    reuses one compiled prefill per bucket);
+  - :class:`VertexServeEngine` — the Cavs-native serving path: decode
+    for *vertex-function* sequence cells (LSTM/GRU), where every engine
+    tick is ONE batching task ``V_t`` over the slot pool, routed
+    through the scheduler's ``fusion_mode``.  Fused, a tick is a single
+    megastep launch (gather previous states + gate math + block
+    scatter, buffer aliased in place); unfused it is the op-by-op
+    gather → apply → scatter oracle.  Slot occupancy, per-slot
+    positions and retirement are pure data — the compiled tick program
+    never changes (the Cavs property, now on the decode path).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scheduler import resolve_fusion
+from repro.core.vertex import VertexIO
+from repro.kernels import ops as kops
 from repro.serve.kv_cache import CacheSlots
 
 Params = Any
@@ -175,3 +194,165 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.rng, sub = jax.random.split(self.rng)
         return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Vertex-function serving (the Cavs decode path, fusion_mode-aware)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VertexRequest:
+    """One streaming sequence for :class:`VertexServeEngine`.
+
+    ``inputs``: ``[L, X_raw]`` external rows (tokens' embeddings,
+    features, ...), consumed one per engine tick.  The engine fills
+    ``final_state`` (``[S]``) when the sequence is exhausted.
+    """
+
+    request_id: int
+    inputs: np.ndarray
+    # -- filled by the engine ------------------------------------------
+    final_state: Optional[np.ndarray] = None
+    done: bool = False
+
+    @property
+    def length(self) -> int:
+        return int(self.inputs.shape[0])
+
+
+class VertexServeEngine:
+    """Continuous batching for arity-1 vertex functions (LSTM/GRU).
+
+    Each tick advances every active slot by one vertex: slot ``m``
+    gathers its previous state, pulls its next external row, and
+    scatters the new state — i.e. one batching task ``V_t`` of width
+    ``num_slots``.  The state pool is a ping-pong buffer
+    ``[2*num_slots + 1, S]`` (last row = zero sentinel): tick parity
+    ``p`` reads block ``p`` and writes block ``1-p``, so reads and
+    writes never overlap — the same non-overlap invariant that makes
+    the training megastep's in-place alias sound.  Fresh slots point
+    their gather at the sentinel (zero initial state) via the child
+    mask, so admission/retirement is pure data.
+
+    ``fusion_mode`` is resolved exactly like the scheduler's
+    (:func:`repro.core.scheduler.resolve_fusion`, including the
+    ``REPRO_FUSION`` env override): when the cell declares a
+    :class:`~repro.core.vertex.GateSpec`, the tick is ONE fused
+    megastep launch; ``"none"`` keeps the op-by-op oracle tick.
+    """
+
+    def __init__(self, fn, params: Params, *, num_slots: int,
+                 fusion_mode: str = "auto"):
+        if getattr(fn, "arity", None) != 1:
+            raise ValueError(
+                f"VertexServeEngine decodes chains (arity-1 cells); "
+                f"{type(fn).__name__} has arity {getattr(fn, 'arity', None)}")
+        self.fn = fn
+        self.params = params
+        self.num_slots = num_slots
+        self.spec = resolve_fusion(fn, fusion_mode, sched_arity=1)
+        S = fn.state_dim
+        self._buf = jnp.zeros((2 * num_slots + 1, S), jnp.float32)
+        self._parity = 0
+        self._pos = np.zeros(num_slots, np.int64)
+        self._slot_req: List[Optional[VertexRequest]] = [None] * num_slots
+        self.queue: List[VertexRequest] = []
+        self.finished: List[VertexRequest] = []
+        self.ticks = 0
+        self._tick = jax.jit(functools.partial(_vertex_tick, fn, self.spec))
+
+    @property
+    def fused(self) -> bool:
+        """True when ticks run as single megastep launches."""
+        return self.spec is not None
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    # -- ingress ------------------------------------------------------------
+    def submit(self, req: VertexRequest) -> None:
+        if req.length < 1:
+            raise ValueError("empty request")
+        self.queue.append(req)
+
+    # -- one engine tick -----------------------------------------------------
+    def step(self) -> int:
+        """Admit + advance every active slot one vertex.  Returns live
+        requests (active + queued) after the tick."""
+        for m in range(self.num_slots):
+            if self._slot_req[m] is None and self.queue:
+                self._slot_req[m] = self.queue.pop(0)
+                self._pos[m] = 0
+        if self.num_active == 0:
+            return len(self.queue)
+
+        M = self.num_slots
+        base, out_base = self._parity * M, (1 - self._parity) * M
+        x_dim = self.fn.input_dim
+        child_ids = np.full((M, 1), 2 * M, np.int32)       # sentinel
+        child_mask = np.zeros((M, 1), np.float32)
+        ext_rows = np.zeros((M, x_dim), np.float32)
+        node_mask = np.zeros((M,), np.float32)
+        for m, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            node_mask[m] = 1.0
+            ext_rows[m] = req.inputs[self._pos[m]]
+            if self._pos[m] > 0:
+                child_ids[m, 0] = base + m
+                child_mask[m, 0] = 1.0
+        self._buf = self._tick(self.params, self._buf,
+                               jnp.asarray(child_ids),
+                               jnp.asarray(child_mask),
+                               jnp.asarray(ext_rows),
+                               jnp.asarray(node_mask),
+                               jnp.int32(out_base))
+        self._parity = 1 - self._parity
+        self.ticks += 1
+
+        done_rows = None
+        for m, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            self._pos[m] += 1
+            if self._pos[m] >= req.length:
+                if done_rows is None:
+                    done_rows = np.asarray(self._buf[out_base: out_base + M])
+                req.final_state = done_rows[m].copy()
+                req.done = True
+                self.finished.append(req)
+                self._slot_req[m] = None
+        return self.num_active + len(self.queue)
+
+    def run(self, max_ticks: int = 100_000) -> List[VertexRequest]:
+        """Drain the queue; returns finished requests."""
+        for _ in range(max_ticks):
+            if self.step() == 0:
+                break
+        return self.finished
+
+
+def _vertex_tick(fn, spec, params: Params, buf: jax.Array,
+                 child_ids: jax.Array, child_mask: jax.Array,
+                 ext_rows: jax.Array, node_mask: jax.Array,
+                 offset: jax.Array) -> jax.Array:
+    """One decode batching task over the slot pool (jitted once; slot
+    occupancy, positions and the ping-pong offset are all data)."""
+    M = child_ids.shape[0]
+    ext = fn.project_inputs(params, ext_rows)          # hoisted eager prefix
+    # Slot m pulls row m directly (inactive slots already carry zero
+    # rows, built host-side) — no ext sentinel needed on this path.
+    ext_ids = jnp.arange(M, dtype=jnp.int32)
+    if spec is not None:
+        return kops.level_megastep(spec.kind, buf, child_ids, child_mask,
+                                   ext_ids, node_mask, offset, ext,
+                                   spec.weights(params))
+    S = buf.shape[1]
+    ch = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, 1, S)
+    io = VertexIO(child_states=ch, child_mask=child_mask.astype(buf.dtype),
+                  external=ext,
+                  node_mask=node_mask.astype(buf.dtype))
+    out = fn.apply(params, io)
+    state = (out.state * io.node_mask[:, None]).astype(buf.dtype)
+    return jax.lax.dynamic_update_slice(buf, state, (offset, 0))

@@ -2,15 +2,19 @@
 file must always collect and run):
 
   - fused ``execute``/``execute_lazy`` ≡ the op-by-op scan ≡
-    ``execute_serial`` on forward states, for var-length chains (LSTM)
-    and random binary trees / multi-parent DAGs (Tree-LSTM);
+    ``execute_serial`` on forward states, for var-length chains
+    (LSTM, GRU), random binary trees (Tree-LSTM, Tree-FC) and
+    multi-parent DAGs (N-ary Tree-LSTM);
   - fused custom-VJP gradients (params AND external) ≡ grad through the
     unfused scan, to 1e-4;
   - the Pallas kernels (interpret mode) ≡ the ``ref.py`` oracle on a
     single batching task, including sentinel children, masked slots and
     in-place preservation of all untouched buffer rows;
-  - ``fusion_mode`` plumbing: "none" vs "megastep" vs "auto", and the
-    required-fusion error for cells without a GateSpec.
+  - the Pallas scatter-add backward (``level_megastep_bwd``) ≡ the jnp
+    reverse sweep, standalone (duplicate indices) and end-to-end;
+  - ``fusion_mode`` plumbing: "none" vs "megastep" vs "auto", the
+    required-fusion error for cells without a GateSpec, and the
+    fixed-arity fallback (Tree-FC on a mismatched schedule).
 """
 
 import numpy as np
@@ -23,9 +27,11 @@ from repro.core.scheduler import (execute, execute_lazy, execute_serial,
                                   readout_nodes, readout_roots)
 from repro.core.structure import (chain, pack_batch, pack_external,
                                   random_binary_tree, random_dag)
+from repro.core.vertex import LambdaVertex, VertexOutput
 from repro.kernels import level_megastep as lm
+from repro.kernels import level_megastep_bwd as lmb
 from repro.kernels import ref
-from repro.models.rnn import LSTMVertex
+from repro.models.rnn import GRUVertex, LSTMVertex
 from repro.models.treelstm import TreeFCVertex, TreeLSTMVertex
 
 
@@ -34,8 +40,15 @@ def _case(kind, seed, input_dim=6, hidden=5):
     if kind == "lstm":
         fn = LSTMVertex(input_dim=input_dim, hidden=hidden)
         graphs = [chain(int(n)) for n in rng.integers(1, 12, size=4)]
+    elif kind == "gru":
+        fn = GRUVertex(input_dim=input_dim, hidden=hidden)
+        graphs = [chain(int(n)) for n in rng.integers(1, 12, size=4)]
     elif kind == "treelstm":
         fn = TreeLSTMVertex(input_dim=input_dim, hidden=hidden, arity=2)
+        graphs = [random_binary_tree(int(n), rng)
+                  for n in rng.integers(1, 10, size=4)]
+    elif kind == "treefc":
+        fn = TreeFCVertex(input_dim=input_dim, hidden=hidden)
         graphs = [random_binary_tree(int(n), rng)
                   for n in rng.integers(1, 10, size=4)]
     else:  # multi-parent DAGs (Fig. 2d) through the N-ary cell
@@ -51,7 +64,7 @@ def _case(kind, seed, input_dim=6, hidden=5):
     return fn, params, graphs, inputs, sched, ext
 
 
-KINDS = ["lstm", "treelstm", "dag"]
+KINDS = ["lstm", "gru", "treelstm", "treefc", "dag"]
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
@@ -90,7 +103,7 @@ def test_fused_grads_equal_unfused(kind, seed):
         np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5), g_un, g_fu)
 
 
-@pytest.mark.parametrize("kind", ["lstm", "treelstm"])
+@pytest.mark.parametrize("kind", ["lstm", "gru", "treelstm", "treefc"])
 def test_fused_lazy_matches_opbyop_lazy(kind):
     fn, params, _, _, sched, ext = _case(kind, 5)
     dev = sched.to_device()
@@ -177,6 +190,109 @@ def test_treelstm_megastep_kernel_matches_ref(seed, m, h, a):
                                   np.asarray(buf[:off]))
 
 
+@pytest.mark.parametrize("seed,m,h", [(0, 6, 8), (1, 3, 16)])
+def test_gru_megastep_kernel_matches_ref(seed, m, h):
+    rng = np.random.default_rng(seed)
+    T, A = 4, 1
+    buf = rng.standard_normal((T * m + 1, h)).astype(np.float32)
+    buf[-1] = 0.0
+    t = 2
+    cids = rng.integers(0, t * m, size=(m, A)).astype(np.int32)
+    cids[0, -1] = T * m                           # one sentinel child
+    cmask = (cids != T * m).astype(np.float32)
+    eids = rng.integers(0, 10, size=(m,)).astype(np.int32)
+    ext = jnp.asarray(rng.standard_normal((11, 3 * h)), jnp.float32)
+    nm = np.ones((m,), np.float32)
+    nm[-1] = 0.0
+    wh = jnp.asarray(rng.standard_normal((h, 3 * h)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3 * h,)) * 0.1, jnp.float32)
+    out_p = lm.gru_megastep(jnp.asarray(buf), jnp.asarray(cids),
+                            jnp.asarray(eids), jnp.asarray(nm),
+                            jnp.int32(t * m), ext, wh, b, interpret=True)
+    out_r = ref.level_megastep("gru", jnp.asarray(buf), jnp.asarray(cids),
+                               jnp.asarray(cmask), jnp.asarray(eids),
+                               jnp.asarray(nm), t * m, ext, (wh, b))
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(out_p[:t * m]), buf[:t * m])
+    np.testing.assert_array_equal(np.asarray(out_p[t * m + m:]),
+                                  buf[t * m + m:])
+
+
+@pytest.mark.parametrize("seed,m,h,a", [(0, 6, 8, 2), (1, 5, 4, 3)])
+def test_treefc_megastep_kernel_matches_ref(seed, m, h, a):
+    rng = np.random.default_rng(seed)
+    T = 4
+    buf = rng.standard_normal((T * m + 1, h)).astype(np.float32)
+    buf[-1] = 0.0
+    t = 2
+    cids = rng.integers(0, t * m, size=(m, a)).astype(np.int32)
+    cids[0, -1] = T * m
+    cmask = (cids != T * m).astype(np.float32)
+    eids = rng.integers(0, 10, size=(m,)).astype(np.int32)
+    ext = jnp.asarray(rng.standard_normal((11, h)), jnp.float32)
+    nm = np.ones((m,), np.float32)
+    nm[-1] = 0.0
+    wc = jnp.asarray(rng.standard_normal((a * h, h)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((h,)) * 0.1, jnp.float32)
+    out_p = lm.treefc_megastep(jnp.asarray(buf), jnp.asarray(cids),
+                               jnp.asarray(eids), jnp.asarray(nm),
+                               jnp.int32(t * m), ext, wc, b, interpret=True)
+    out_r = ref.level_megastep("treefc", jnp.asarray(buf), jnp.asarray(cids),
+                               jnp.asarray(cmask), jnp.asarray(eids),
+                               jnp.asarray(nm), t * m, ext, (wc, b))
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(out_p[:t * m]), buf[:t * m])
+    np.testing.assert_array_equal(np.asarray(out_p[t * m + m:]),
+                                  buf[t * m + m:])
+
+
+# ---------------------------------------------------------------------------
+# Pallas scatter-add backward (level_megastep_bwd) vs jnp reverse sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,r,d,n", [(0, 20, 10, 16), (1, 9, 130, 5),
+                                        (2, 33, 256, 40)])
+def test_scatter_add_rows_kernel_matches_ref(seed, r, d, n):
+    """The backward memory op: duplicates must accumulate (∂gather =
+    scatter-add for multi-parent DAGs), untouched rows preserved."""
+    rng = np.random.default_rng(seed)
+    dst = rng.standard_normal((r, d)).astype(np.float32)
+    idx = rng.integers(0, r, size=(n,)).astype(np.int32)
+    idx[n // 2] = idx[0]                          # force a duplicate
+    rows = rng.standard_normal((n, d)).astype(np.float32)
+    out_p = lmb.scatter_add_rows(jnp.asarray(dst), jnp.asarray(idx),
+                                 jnp.asarray(rows), interpret=True)
+    out_r = ref.scatter_add_rows(jnp.asarray(dst), jnp.asarray(idx),
+                                 jnp.asarray(rows))
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+    untouched = np.setdiff1d(np.arange(r), idx)
+    np.testing.assert_array_equal(np.asarray(out_p)[untouched],
+                                  dst[untouched])
+
+
+@pytest.mark.parametrize("kind", ["lstm", "gru", "treelstm", "treefc", "dag"])
+def test_pallas_backward_matches_jnp_sweep(kind, monkeypatch):
+    """End-to-end: the fused backward with the PALLAS scatter-add kernel
+    (interpret mode) ≡ the same sweep through XLA's .at[].add oracle.
+    The DAG case exercises duplicate child indices within one level."""
+    fn, params, _, _, sched, ext = _case(kind, 17, input_dim=4, hidden=4)
+    dev = sched.to_device()
+
+    def loss(p, e):
+        r = execute(fn, p, dev, e, fusion_mode="megastep")
+        return jnp.sum(readout_roots(r.buf, dev) ** 2)
+
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    g_pal = jax.grad(loss, (0, 1))(params, ext)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "chunked")
+    g_jnp = jax.grad(loss, (0, 1))(params, ext)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5), g_pal, g_jnp)
+
+
 def test_scheduler_pallas_megastep_matches_unfused(monkeypatch):
     """End-to-end: the scheduler's fused scan with the PALLAS backend
     (interpret mode on CPU) ≡ the unfused op-by-op scan."""
@@ -207,7 +323,12 @@ def test_fusion_mode_auto_uses_megastep_and_env_disables(monkeypatch):
 
 
 def test_fusion_mode_megastep_requires_gate_spec():
-    fn = TreeFCVertex(input_dim=2, hidden=3)
+    # A cell with no gate_spec() declaration stays on the op-by-op path.
+    fn = LambdaVertex(
+        state_dim=3, ext_dim=2, arity=1,
+        init_fn=lambda rng: {"w": jnp.zeros((2, 3))},
+        apply_fn=lambda p, io: VertexOutput(state=io.pull() @ p["w"]),
+        project_fn=lambda p, raw: raw)
     params = fn.init(jax.random.PRNGKey(0))
     sched = pack_batch([chain(3)], pad_arity=2)
     ext = jnp.asarray(pack_external([np.ones((3, 2), np.float32)], sched, 2))
@@ -219,3 +340,20 @@ def test_fusion_mode_megastep_requires_gate_spec():
     with pytest.raises(ValueError, match="hoist"):
         execute(fn2, fn2.init(jax.random.PRNGKey(0)), dev,
                 jnp.zeros((4, 2)), hoist=False, fusion_mode="megastep")
+
+
+def test_fusion_mode_treefc_arity_mismatch():
+    """Tree-FC's concat weight fixes the gather arity: a schedule packed
+    at a different A must raise under "megastep" and resolve to the
+    op-by-op path (spec None) under "auto"."""
+    from repro.core.scheduler import resolve_fusion
+    fn = TreeFCVertex(input_dim=2, hidden=3)          # arity 2
+    params = fn.init(jax.random.PRNGKey(0))
+    sched = pack_batch([chain(3)])                    # chains pack at A=1
+    ext = jnp.asarray(pack_external([np.ones((3, 2), np.float32)], sched, 2))
+    dev = sched.to_device()
+    with pytest.raises(ValueError, match="arity"):
+        execute(fn, params, dev, ext, fusion_mode="megastep")
+    assert resolve_fusion(fn, "auto", sched_arity=1) is None
+    assert resolve_fusion(fn, "auto", sched_arity=2) is not None
+    assert resolve_fusion(fn, "auto", sched_arity=2).kind == "treefc"

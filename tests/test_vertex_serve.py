@@ -1,0 +1,101 @@
+"""Fusion-aware vertex-function serving (serve.engine.VertexServeEngine):
+the decode tick is one batching task routed through ``fusion_mode``, so
+fused and op-by-op engines — and the training scheduler run over the
+same chains — must agree on every request's final state, under slot
+reuse and staggered admission."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import execute, readout_nodes
+from repro.core.structure import chain, pack_batch, pack_external
+from repro.models.rnn import GRUVertex, LSTMVertex
+from repro.models.treelstm import TreeLSTMVertex
+from repro.serve import VertexRequest, VertexServeEngine
+
+
+def _requests(rng, lens, input_dim):
+    return [rng.standard_normal((L, input_dim)).astype(np.float32) * 0.3
+            for L in lens]
+
+
+def _scheduler_finals(fn, params, inputs):
+    graphs = [chain(x.shape[0]) for x in inputs]
+    sched = pack_batch(graphs)
+    ext = jnp.asarray(pack_external(inputs, sched, fn.input_dim))
+    dev = sched.to_device()
+    buf = execute(fn, params, dev, ext, fusion_mode="none").buf
+    nodes = np.asarray(readout_nodes(buf, dev))
+    return [nodes[k, x.shape[0] - 1] for k, x in enumerate(inputs)]
+
+
+@pytest.mark.parametrize("cell", [LSTMVertex, GRUVertex])
+def test_decode_fused_equals_unfused_equals_scheduler(cell):
+    fn = cell(input_dim=6, hidden=5)
+    params = fn.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = [3, 7, 1, 5, 4, 6]                 # 6 requests through 2 slots
+    inputs = _requests(rng, lens, 6)
+
+    finals = {}
+    for mode in ("megastep", "none"):
+        eng = VertexServeEngine(fn, params, num_slots=2, fusion_mode=mode)
+        assert eng.fused == (mode == "megastep")
+        for i, x in enumerate(inputs):
+            eng.submit(VertexRequest(request_id=i, inputs=x))
+        done = eng.run()
+        assert len(done) == len(lens) and eng.num_active == 0
+        finals[mode] = {r.request_id: r.final_state for r in done}
+
+    oracle = _scheduler_finals(fn, params, inputs)
+    for i in range(len(lens)):
+        np.testing.assert_allclose(finals["megastep"][i], finals["none"][i],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(finals["megastep"][i], oracle[i],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_decode_staggered_admission_slot_isolation():
+    """A request's final state must not depend on its co-tenants or on
+    WHEN it was admitted (continuous batching is pure data)."""
+    fn = LSTMVertex(input_dim=4, hidden=3)
+    params = fn.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    x0 = rng.standard_normal((6, 4)).astype(np.float32)
+
+    def run(co_lens, co_at_tick):
+        eng = VertexServeEngine(fn, params, num_slots=3)
+        eng.submit(VertexRequest(request_id=0, inputs=x0))
+        for _ in range(co_at_tick):
+            eng.step()
+        for i, L in enumerate(co_lens):
+            eng.submit(VertexRequest(
+                request_id=1 + i,
+                inputs=rng.standard_normal((L, 4)).astype(np.float32)))
+        done = eng.run()
+        return {r.request_id: r.final_state for r in done}
+
+    a = run(co_lens=[2, 9], co_at_tick=0)
+    b = run(co_lens=[5], co_at_tick=3)
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_decode_respects_fusion_env(monkeypatch):
+    """REPRO_FUSION=none must force the op-by-op tick under "auto" —
+    the same env contract as the training scheduler."""
+    fn = GRUVertex(input_dim=4, hidden=3)
+    params = fn.init(jax.random.PRNGKey(2))
+    eng_auto = VertexServeEngine(fn, params, num_slots=2)
+    assert eng_auto.fused
+    monkeypatch.setenv("REPRO_FUSION", "none")
+    eng_off = VertexServeEngine(fn, params, num_slots=2)
+    assert not eng_off.fused
+
+
+def test_decode_rejects_tree_cells():
+    fn = TreeLSTMVertex(input_dim=4, hidden=3, arity=2)
+    with pytest.raises(ValueError, match="arity"):
+        VertexServeEngine(fn, fn.init(jax.random.PRNGKey(0)), num_slots=2)
