@@ -40,7 +40,8 @@ from repro.core.fusion import count_hlo_kernels
 from repro.core.scheduler import execute, execute_lazy, readout_roots
 from repro.core.structure import pack_batch, pack_external
 from repro.core.vertex import get_gate_spec
-from repro.kernels.level_megastep import level_traffic_bytes
+from repro.kernels.level_megastep import (level_bwd_traffic_bytes,
+                                          level_traffic_bytes)
 
 
 def setup(model: str, bs: int, hidden: int, rng):
@@ -154,6 +155,34 @@ def bench(col: Collector, models, bs: int = 32, hidden: int = 64):
                     "B", "child+ext rows read once, state block written")
             col.add(f"ablation/{model}/megastep_hbm_reduction",
                     b_un / b_fu, "x", "modeled HBM round-trips per level")
+
+            # Train direction (PR 3): the reverse sweep is now ONE
+            # fused launch per level too (bwd_megastep: recompute +
+            # cotangent math + scatter-add, grad buffer aliased) vs the
+            # jnp level_bwd sandwiched between memory-op launches.
+            gb_un = level_bwd_traffic_bytes(spec.kind, dev.M, A, S, H,
+                                            fused=False)
+            gb_fu = level_bwd_traffic_bytes(spec.kind, dev.M, A, S, H,
+                                            fused=True)
+            comp_g = g_scan.lower(params, ext).compile()
+            g_counts = count_hlo_kernels(comp_g.as_text())
+            g_launches = sum(v for k, v in g_counts.items() if k != "other")
+            # Grad HLO has two while loops (fwd replay + reverse): a
+            # per-level census divides by 2T.
+            col.add(f"ablation/{model}/bwd_launches_per_level_unfused",
+                    max(1, g_launches - 2) / max(1, 2 * dev.T), "kernels",
+                    "measured grad-HLO census / 2T (fwd replay + reverse)")
+            col.add(f"ablation/{model}/bwd_launches_per_level_megastep", 1,
+                    "kernels", "structural: one bwd_megastep launch per "
+                    "reverse level")
+            col.add(f"ablation/{model}/bwd_hbm_bytes_per_level_unfused",
+                    gb_un, "B", f"M={dev.M} A={A} S={S}")
+            col.add(f"ablation/{model}/bwd_hbm_bytes_per_level_megastep",
+                    gb_fu, "B", "child rows+g_state read once, only "
+                    "touched dst rows r/w (sorted runs)")
+            col.add(f"ablation/{model}/bwd_megastep_hbm_reduction",
+                    gb_un / gb_fu, "x",
+                    "modeled HBM round-trips per reverse level")
 
 
 def main(argv=None):

@@ -19,9 +19,10 @@ import numpy as np
 
 from benchmarks.common import Collector, time_fn, time_stats
 from repro.configs.paper import get_paper_model
-from repro.core.scheduler import execute, execute_serial
+from repro.core.scheduler import execute, execute_serial, readout_roots
 from repro.core.structure import chain, pack_batch, pack_external
-from repro.kernels.level_megastep import level_traffic_bytes
+from repro.kernels.level_megastep import (level_bwd_traffic_bytes,
+                                          level_traffic_bytes)
 from repro.serve import VertexRequest, VertexServeEngine
 
 
@@ -57,6 +58,34 @@ def bench(col: Collector, bs_list, h_list, max_len: int = 64):
             col.add("var_lstm/megastep_speedup",
                     sb_un["p50_ms"] / sb_fu["p50_ms"], "x",
                     f"bs={bs} h={h} (fused level-megastep vs op-by-op)")
+
+            # Train direction: fused fwd + fused bwd sweep (one
+            # bwd_megastep per reverse level) vs grad-through-scan.
+            def _loss(p, e, mode):
+                r = execute(fn, p, dev, e, fusion_mode=mode)
+                return jnp.sum(readout_roots(r.buf, dev) ** 2)
+
+            g_un = jax.jit(jax.grad(lambda p, e: _loss(p, e, "none")))
+            g_fu = jax.jit(jax.grad(lambda p, e: _loss(p, e, "megastep")))
+            sg_un = time_stats(lambda: g_un(params, ext))
+            sg_fu = time_stats(lambda: g_fu(params, ext))
+            col.add_time("var_lstm/train_unfused", sg_un, det)
+            col.add_time("var_lstm/train_megastep", sg_fu, det)
+            col.add("var_lstm/train_megastep_speedup",
+                    sg_un["p50_ms"] / sg_fu["p50_ms"], "x",
+                    f"bs={bs} h={h} (fused fwd + fused bwd sweep; CPU "
+                    f"wall-clock advisory)")
+            S = fn.state_dim
+            gb_un = level_bwd_traffic_bytes("lstm", dev.M, dev.A, S, h,
+                                            fused=False)
+            gb_fu = level_bwd_traffic_bytes("lstm", dev.M, dev.A, S, h,
+                                            fused=True)
+            col.add("var_lstm/bwd_hbm_bytes_per_level_unfused", gb_un, "B",
+                    f"bs={bs} h={h} M={dev.M}")
+            col.add("var_lstm/bwd_hbm_bytes_per_level_megastep", gb_fu, "B",
+                    f"bs={bs} h={h} M={dev.M}")
+            col.add("var_lstm/bwd_hbm_reduction", gb_un / gb_fu, "x",
+                    f"bs={bs} h={h} (modeled reverse-level round-trips)")
 
             # pad-to-max static unrolling (the TF baseline of §2.2)
             padded = [chain(max_len) for _ in range(bs)]

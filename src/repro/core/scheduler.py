@@ -40,11 +40,18 @@ via the ``REPRO_FUSION`` env var) fuses whenever the cell supports it
 (including the fixed-arity check for Tree-FC's concat weight);
 ``"none"`` keeps the op-by-op path (the correctness oracle and ablation
 baseline); ``"megastep"`` requires fusion and raises when unsupported.
-The fused path carries its own custom VJP: the reverse sweep pushes
-state-chain cotangents back with scatter-adds (∂gather = scatter-add,
-§3.4 — on the pallas backend the dedicated kernel in
-``kernels/level_megastep_bwd.py``) and the parameter/external gradients
-are computed lazily in one flat batched pass (§3.5) — so both
+The fused path carries its own custom VJP, and its reverse sweep now
+mirrors the forward megastep: each reverse level is ONE fused op
+(``kops.bwd_megastep``) that recomputes the level's gates from the
+residual node buffer, applies the cotangent math for the declared
+kind, and scatter-ADDs the child-row cotangents into the carried
+gradient buffer (∂gather = scatter-add, §3.4) — on the pallas backend
+a single launch per level (``kernels/level_megastep_bwd.bwd_megastep``)
+with the gradient buffer aliased in place; off-pallas the jnp
+``level_bwd`` sweep, which stays the correctness oracle and ablation
+baseline (selectable via ``REPRO_FUSION=none`` /
+``REPRO_KERNEL_IMPL=chunked``).  The parameter/external gradients are
+computed lazily in one flat batched pass (§3.5) — so both
 :func:`execute` and :func:`execute_lazy` share one backward, with
 activations recomputed from the node buffer (remat).
 """
@@ -213,8 +220,9 @@ def _megastep_fwd(fn, params, external, sched):
 
 
 def _megastep_bwd(fn, res, g_buf):
-    """The fused reverse: per-level scatter-add sweep for the state
-    chain (∂gather = scatter-add, §3.4) + ONE flat lazily-batched
+    """The fused reverse: ONE launch per level for the state chain
+    (recompute + cotangent math + ∂gather scatter-add fused,
+    ``kops.bwd_megastep`` — §3.4) + ONE flat lazily-batched
     parameter/external gradient pass (§3.5).  Activations are
     recomputed from the saved node buffer (remat)."""
     params, ext, buf, sched, hoist_vjp = res
@@ -226,24 +234,23 @@ def _megastep_bwd(fn, res, g_buf):
 
     def rev_step(g, xs):
         t, child_ids, child_mask, ext_ids, node_mask = xs
-        g_state = jax.lax.dynamic_slice(g, (t * M, 0), (M, S))
-        g_state = g_state * node_mask[:, None].astype(g.dtype)
-        child = jnp.take(buf, child_ids.reshape(-1),
-                         axis=0).reshape(M, A, S)
-        rows = jnp.take(ext, ext_ids, axis=0)
-        g_child, _, _ = megastep.level_bwd(spec.kind, g_state, child, rows,
-                                           child_mask, weights)
-        # ∂gather = scatter-add (§3.4), rendered as the same customized
-        # memcpy kernel family as the forward gather (child-masked rows
-        # pointed at the sentinel contribute exact zeros).
-        g = kops.scatter_add_rows(g, child_ids.reshape(-1),
-                                  g_child.reshape(M * A, S).astype(g.dtype))
-        return g, g_state
+        # One fused reverse megastep: the level's state cotangent is
+        # turned into child-row cotangents and scatter-ADDED into the
+        # carried gradient buffer in place (on the pallas backend a
+        # single launch mirroring the forward; off-pallas the jnp
+        # ``level_bwd`` sweep — the correctness oracle).
+        g = kops.bwd_megastep(spec.kind, g, buf, child_ids, child_mask,
+                              ext_ids, node_mask, t * M, ext, weights)
+        return g, None
 
     xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
           sched.ext_ids, sched.node_mask)
-    _, g_states = jax.lax.scan(rev_step, g_buf, xs, reverse=True)
-    g_state_flat = g_states.reshape(T * M, S)
+    g_final, _ = jax.lax.scan(rev_step, g_buf, xs, reverse=True)
+    # Row t*M+m reaches its final value before level t's reverse step
+    # runs (all its parents live at levels > t), so the swept buffer IS
+    # the per-slot state cotangent — no per-level stacking needed.
+    g_state_flat = g_final[: T * M] \
+        * sched.node_mask.reshape(T * M)[:, None].astype(g_final.dtype)
 
     # Lazy batching: one analytic pass over ALL T*M slots for the
     # parameter and pulled-row gradients.

@@ -338,8 +338,16 @@ def treefc_megastep(buf: Array, child_ids: Array, ext_ids: Array,
 
 
 # ---------------------------------------------------------------------------
-# Analytic backward of one megastep (jnp; shared by the reverse sweep
-# and the flat lazy parameter-gradient pass)
+# Analytic backward of one megastep — the SHARED gate-math helpers.
+#
+# These are plain shape-polymorphic jnp, so the same code runs in three
+# places: (a) the scheduler's flat lazy parameter-gradient pass (batched
+# over all T*M slots), (b) the jnp oracle reverse sweep
+# (``ops.bwd_megastep`` off-pallas), and (c) INSIDE the fused backward
+# Pallas kernel (``level_megastep_bwd.bwd_megastep``), where they trace
+# with N=1 over VMEM-resident refs.  Keep them kernel-safe: no
+# ``jnp.take``, no data-dependent shapes, biases accepted as ``[G]`` or
+# ``[1, G]`` (the kernel feeds 2-D rows).
 # ---------------------------------------------------------------------------
 
 def _lstm_bwd(g_state, child, ext_rows, child_mask, weights):
@@ -379,7 +387,7 @@ def _treelstm_bwd(g_state, child, ext_rows, child_mask, weights):
     h_sum = jnp.sum(h_k, axis=1)
     ext_rows = ext_rows.astype(jnp.float32)
     xi, xf, xo, xu = jnp.split(ext_rows, 4, axis=-1)
-    bi, bf, bo, bu = jnp.split(b, 4)
+    bi, bf, bo, bu = jnp.split(b, 4, axis=-1)
     i = jax.nn.sigmoid(xi + h_sum @ ui + bi)
     # Per-child recurrences as flattened [N*A, H] matmuls — the batched
     # einsum form lowers ~2.5x slower on XLA CPU (docs/benchmarks.md).
@@ -532,3 +540,37 @@ def level_traffic_bytes(kind: str, M: int, A: int, S: int, H: int,
     dus_rt = 2 * write_state               # state tensor + buffer update
     return (read_children + read_ext + gather_rt + ext_rt + gates_rt
             + dus_rt) * itemsize
+
+
+def level_bwd_traffic_bytes(kind: str, M: int, A: int, S: int, H: int,
+                            fused: bool, itemsize: int = 4) -> int:
+    """Modeled HBM bytes moved by ONE batching task's reverse step.
+
+    Unfused (the jnp ``level_bwd`` sandwiched between launches): the
+    recompute re-gathers the ``[M, A, S]`` child rows (materialize +
+    re-read), the pulled ``[M, G]`` ext rows and the recomputed gate
+    tensor round-trip, the ``[M, G]`` gate cotangents round-trip, the
+    ``[M, A, S]`` child cotangents materialize and are re-read by the
+    scatter-add, whose destination rows are read-modified-written.
+    Fused (``level_megastep_bwd.bwd_megastep``): child rows, ext rows
+    and the ``[M, S]`` state cotangent are read ONCE HBM→VMEM, every
+    recomputed gate and every cotangent lives in VMEM scratch, and only
+    the touched destination rows (≤ ``M·A``, sorted-run discipline) are
+    read + written.  Weight traffic is identical (resident either way
+    under scan) and excluded.
+    """
+    g = {"lstm": 4, "treelstm": 4, "gru": 3, "treefc": 1}[kind] * H
+    read_children = M * A * S              # recompute gather (remat)
+    read_ext = M * g
+    read_gstate = M * S
+    dst_rmw = 2 * M * A * S                # scatter-add rows read + write
+    if fused:
+        return (read_children + read_ext + read_gstate + dst_rmw) * itemsize
+    gather_rt = 2 * read_children          # take materializes + cell re-reads
+    ext_rt = 2 * read_ext
+    gates_rt = 2 * M * g                   # recomputed pre-activations
+    dgates_rt = 2 * M * g                  # gate cotangents round-trip
+    gchild_rt = 2 * M * A * S              # child cotangents materialize + re-read
+    gstate_rt = 2 * read_gstate            # slice materializes + re-read
+    return (read_children + read_ext + gather_rt + ext_rt + gates_rt
+            + dgates_rt + gchild_rt + gstate_rt + dst_rmw) * itemsize

@@ -1,62 +1,99 @@
-"""Pallas scatter-ADD — the megastep reverse sweep's memory op (§3.4).
+"""The fused backward level-megastep + the standalone scatter-ADD.
 
-The fused backward propagates state-chain cotangents level by level:
-for each batching task the analytic gate backward
-(``level_megastep.level_bwd``) turns the ``[M, S]`` state cotangent into
-``[M*A, S]`` child-row cotangents, which must be ADDED into the buffer
-cotangent at the (scalar) ``child_ids`` — ∂gather = scatter-add.  The
-op-by-op path leaves this to XLA's ``.at[].add`` (a generic scatter);
-here it is rendered as the same kind of customized memcpy kernel as
-``gather_scatter.py``, completing the Cavs primitive set:
+The megastep reverse sweep propagates state-chain cotangents level by
+level (∂gather = scatter-add, §3.4).  Through PR 2 the memory op was a
+Pallas kernel but the gate-math backward stayed plain jnp *between*
+launches, so every reverse level still round-tripped the recomputed
+gates and the ``[M·A, S]`` child cotangents through HBM.  This module
+now renders the WHOLE reverse step as one launch, mirroring the
+forward megastep:
 
-  gather        → ``gather_scatter.gather_rows``   (fwd)
-  scatter       → ``gather_scatter.scatter_rows``  (fwd, unique rows)
-  ∂gather       → ``scatter_add_rows``             (bwd, duplicates OK)
+  :func:`bwd_megastep` — one ``pallas_call`` per reverse level that
+    (a) re-gathers the child rows from the residual node buffer via
+        scalar-prefetched ``child_ids`` (recompute/remat — the forward
+        saved nothing but the buffer),
+    (b) runs the analytic cotangent math for the declared gate kind
+        (lstm / gru / treelstm / treefc — the SAME shape-polymorphic
+        helpers ``level_megastep.level_bwd`` uses, traced here with
+        N=1 over VMEM-resident values), and
+    (c) folds the duplicate-safe ∂gather scatter-add into the same
+        launch, with the gradient buffer aliased in place.
 
-Unlike ``scatter_rows``, indices here may REPEAT: a vertex gathered by
-several parents in one level (multi-parent DAGs, Fig. 2d) receives one
-cotangent contribution per parent.  A grid-over-rows kernel whose output
-index map revisits the same block is a read-after-write hazard under the
-double-buffered pipeline, so this kernel inverts the layout instead:
+Duplicate indices (a vertex gathered by several parents in one level,
+multi-parent DAGs Fig. 2d) make a grid-over-rows output a
+read-after-write hazard under the double-buffered pipeline whenever a
+block is REVISITED.  The fused kernel sidesteps the hazard with a
+**sorted-run** discipline instead of the column stripes of PR 2:
 
-  * the grid walks **column stripes** of the destination — each output
-    block is visited exactly once (no revisit hazard, alias-safe);
-  * within a stripe the destination lives whole in VMEM and a
-    ``fori_loop`` accumulates the ``n`` row cotangents sequentially via
-    scalar-prefetched ``idx`` (``idx`` is in SMEM before the grid
-    starts, the same discipline that drives the gather DMA forward) —
-    duplicate indices are correct by construction and deterministic.
+  * outside the kernel, the level's flat ``child_ids`` are argsorted
+    (runtime data — the schedule is data, §3.2), so duplicate
+    destinations become ADJACENT grid steps;
+  * the grid is ``(2·M·A,)``: the first ``M·A`` steps stream child
+    rows HBM→VMEM and stash the per-slot cotangent rows in a VMEM
+    scratch carry; the last ``M·A`` steps walk contributions in sorted
+    order — each destination row is one CONTIGUOUS run of grid steps,
+    so each output block is entered exactly once (seed from the
+    gradient buffer on the first step of its run, accumulate in VMEM,
+    flush when the run ends).  Duplicates are correct by construction
+    and deterministic; untouched rows are preserved by the alias.
 
-VMEM budget per stripe: ``(R + n) * block_d * 4`` bytes — at the
-largest paper config (``R = T*M + 1 ≈ 8k`` rows, ``n = M*A ≈ 512``,
-``block_d = 512``) about 17 MB, so tighter configs should lower
-``block_d`` (128 → ~4.3 MB); the row adds are VPU work either way.
-The jnp oracle (``ref.scatter_add_rows``) stays the interpret-mode and
-CPU ground truth; ``ops.scatter_add_rows`` dispatches between them.
+VMEM budget: the ``[M·A, S]`` cotangent carry dominates —
+``M·A·S·4`` bytes (2 MB at ``M=256, A=2, S=1024``) plus the resident
+weights; destination traffic touches only the ≤ ``M·A`` contributed
+rows, never a full buffer stripe.
+
+:func:`scatter_add_rows` (the standalone memory op, still used by the
+oracle sweep and exported as a Cavs primitive) keeps the column-striped
+layout but is now additionally **row-chunked**: the grid walks
+``(column stripe, row panel)`` pairs, each destination panel holds
+``[block_r, block_d]`` in VMEM (seeded, then a ``fori_loop`` over all
+``n`` contributions adds the ones landing in the panel), so deep/wide
+schedules no longer pin a full ``[T*M+1, block_d]`` stripe in VMEM —
+the ROADMAP VMEM-scaling item.  VMEM per step: ``(block_r + n) *
+block_d * 4`` bytes.
+
+The jnp oracles (``ref.scatter_add_rows``, ``ref.bwd_megastep``) stay
+the interpret-mode and CPU ground truth; ``ops.scatter_add_rows`` /
+``ops.bwd_megastep`` dispatch between them.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import level_megastep as lm
+
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def _scatter_add_kernel(idx_ref, dst_ref, rows_ref, out_ref, *, n: int):
-    # One column stripe: seed with the current cotangent, then fold in
-    # every row contribution in order (duplicate indices accumulate).
+# ---------------------------------------------------------------------------
+# Standalone scatter-add (column stripes × row panels)
+# ---------------------------------------------------------------------------
+
+def _scatter_add_kernel(idx_ref, dst_ref, rows_ref, out_ref, *,
+                        n: int, block_r: int):
+    # One (column stripe, row panel) block: seed with the current
+    # cotangent, then fold in every row contribution in order —
+    # contributions outside the panel add an exact zero row (duplicate
+    # indices accumulate; panel membership is a mask, not a branch).
+    p = pl.program_id(1)
     out_ref[...] = dst_ref[...]
+    base = p * block_r
 
     def body(i, _):
-        r = idx_ref[i]
-        out_ref[pl.ds(r, 1), :] += rows_ref[pl.ds(i, 1), :]
+        local = idx_ref[i] - base
+        ok = jnp.logical_and(local >= 0, local < block_r)
+        r = jnp.clip(local, 0, block_r - 1)
+        out_ref[pl.ds(r, 1), :] += (rows_ref[pl.ds(i, 1), :]
+                                    * ok.astype(rows_ref.dtype))
         return 0
 
     jax.lax.fori_loop(0, n, body, 0)
@@ -64,6 +101,7 @@ def _scatter_add_kernel(idx_ref, dst_ref, rows_ref, out_ref, *, n: int):
 
 def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array, *,
                      block_d: int = 512,
+                     block_r: int = 1024,
                      interpret: bool = False) -> jax.Array:
     """``dst``: ``[R, D]``; ``idx``: ``[n]`` int32 in ``[0, R)`` (repeats
     allowed); ``rows``: ``[n, D]`` → ``dst`` with ``rows[i]`` added at
@@ -72,29 +110,156 @@ def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array, *,
     Masked contributions must arrive as zero rows pointed at a sentinel
     index — exactly what ``level_bwd``'s child-mask produces — since,
     unlike ``ref.scatter_add_rows(mode="drop")``, nothing is dropped.
+
+    ``block_d`` stripes the columns; ``block_r`` chunks the rows, so
+    VMEM holds one ``[block_r, block_d]`` destination panel at a time
+    (grid over panels with the row-cotangent stripe carried resident).
     """
     R, D = dst.shape
     n = idx.shape[0]
     bd = min(block_d, _round_up(D, 128))
     Dp = _round_up(D, bd)
-    dstp = jnp.pad(dst, ((0, 0), (0, Dp - D)))
+    br = min(block_r, R)
+    Rp = _round_up(R, br)
+    dstp = jnp.pad(dst, ((0, Rp - R), (0, Dp - D)))
     rowsp = jnp.pad(rows.astype(dst.dtype), ((0, 0), (0, Dp - D)))
 
-    stripe = lambda shape: pl.BlockSpec(shape, lambda j, i_ref: (0, j))  # noqa: E731
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(Dp // bd,),
+        # Column stripe outer, row panel inner: the [n, bd] contribution
+        # stripe stays resident across the panels of one stripe.
+        grid=(Dp // bd, Rp // br),
         in_specs=[
-            stripe((R, bd)),                      # dst (alias seed)
-            stripe((n, bd)),                      # row cotangents
+            pl.BlockSpec((br, bd), lambda j, p, i_ref: (p, j)),   # dst seed
+            pl.BlockSpec((n, bd), lambda j, p, i_ref: (0, j)),    # cotangents
         ],
-        out_specs=stripe((R, bd)),
+        out_specs=pl.BlockSpec((br, bd), lambda j, p, i_ref: (p, j)),
     )
     out = pl.pallas_call(
-        functools.partial(_scatter_add_kernel, n=n),
+        functools.partial(_scatter_add_kernel, n=n, block_r=br),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((R, Dp), dst.dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, Dp), dst.dtype),
         input_output_aliases={1: 0},   # dst (first tensor operand) → out
         interpret=interpret,
     )(idx.astype(jnp.int32), dstp, rowsp)
-    return out[:, :D]
+    return out[:R, :D]
+
+
+# ---------------------------------------------------------------------------
+# Fused backward megastep (recompute + cotangent math + scatter-add,
+# one launch per reverse level)
+# ---------------------------------------------------------------------------
+
+def _bwd_megastep_kernel(cids_ref, eids_ref, nmask_ref, scids_ref, perm_ref,
+                         child_ref, gstate_ref, ext_ref, dst_ref, *rest,
+                         kind: str, A: int, S: int, n: int, sentinel: int,
+                         nw: int):
+    w_refs = rest[:nw]
+    out_ref = rest[nw]
+    chd_ref, gch_ref = rest[nw + 1:]
+    i = pl.program_id(0)
+
+    # -- phase 1, steps [0, n): stream child rows, stash cotangents -----
+    @pl.when(i < n)
+    def _gather():
+        a = jax.lax.rem(i, A)
+        chd_ref[pl.ds(a, 1), :] = child_ref[...].astype(jnp.float32)
+
+    @pl.when(jnp.logical_and(i < n, jax.lax.rem(i, A) == A - 1))
+    def _math():
+        m = jax.lax.div(i, A)
+        child = chd_ref[...][None]                           # [1, A, S]
+        # Child validity from the prefetched ids (pack_batch points every
+        # absent child at the sentinel row) — the cotangent rows of
+        # masked children become exact zeros aimed at the sentinel.
+        cmask = jnp.stack(
+            [(cids_ref[m, aa] != sentinel) for aa in range(A)]
+        ).astype(jnp.float32).reshape(1, A)
+        nm = nmask_ref[m].astype(jnp.float32)
+        g_state = gstate_ref[pl.ds(m, 1), :].astype(jnp.float32) * nm
+        ext_row = ext_ref[...].astype(jnp.float32)
+        weights = tuple(w[...] for w in w_refs)
+        g_child, _, _ = lm.level_bwd(kind, g_state, child, ext_row,
+                                     cmask, weights)
+        gch_ref[pl.ds(m * A, A), :] = g_child.reshape(A, S)
+
+    # -- phase 2, steps [n, 2n): sorted-run scatter-add -----------------
+    @pl.when(i >= n)
+    def _scatter():
+        k = i - n
+        is_run_head = jnp.logical_or(
+            k == 0, scids_ref[jnp.maximum(k - 1, 0)] != scids_ref[k])
+
+        @pl.when(is_run_head)
+        def _seed():
+            out_ref[...] = dst_ref[...]
+
+        out_ref[...] += gch_ref[pl.ds(perm_ref[k], 1), :].astype(out_ref.dtype)
+
+
+def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
+                 child_ids: jax.Array, ext_ids: jax.Array,
+                 node_mask: jax.Array, offset: jax.Array, ext: jax.Array,
+                 weights: Tuple[jax.Array, ...], *,
+                 interpret: bool = False) -> jax.Array:
+    """One fused reverse batching task, in place.
+
+    ``g``: ``[T*M+1, S]`` gradient buffer (aliased: the output IS this
+    buffer with the child-row cotangents of level ``offset//M``
+    scatter-ADDED); ``buf``: the residual forward node buffer (gate
+    recompute source, read-only); ``offset``: scalar ``t*M``.  Returns
+    the updated gradient buffer; rows ``[offset, offset+M)`` and every
+    untouched row are preserved bit-exact.
+    """
+    M, A = child_ids.shape
+    S = g.shape[1]
+    G = ext.shape[1]
+    n = M * A
+    sentinel = g.shape[0] - 1
+    cflat = child_ids.reshape(-1).astype(jnp.int32)
+    # Sorted-run preprocessing (runtime data, like the schedule itself):
+    # duplicate destinations become adjacent, so each output row is one
+    # contiguous run of grid steps — no block revisits, no RAW hazard.
+    perm = jnp.argsort(cflat).astype(jnp.int32)
+    scids = cflat[perm]
+    # The level's own cotangent block is read-only at this level
+    # (children live at levels < t), so a [M, S] slice feeds the kernel.
+    g_state = jax.lax.dynamic_slice(g, (offset, 0), (M, S))
+    ws = tuple(w if w.ndim == 2 else w[None, :] for w in weights)
+    nw = len(ws)
+
+    def im_child(g0, c, e, m_, s_, p_):
+        gg = jnp.minimum(g0, n - 1)          # phase-2 steps: harmless reload
+        return (c[gg // A, gg % A], 0)
+
+    def im_ext(g0, c, e, m_, s_, p_):
+        return (e[jnp.minimum(g0, n - 1) // A], 0)
+
+    def im_dst(g0, c, e, m_, s_, p_):
+        return (s_[jnp.clip(g0 - n, 0, n - 1)], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(2 * n,),
+        in_specs=[
+            pl.BlockSpec((1, S), im_child),                       # gather
+            pl.BlockSpec((M, S), lambda *a: (0, 0)),              # g_state
+            pl.BlockSpec((1, G), im_ext),                         # pull
+            pl.BlockSpec((1, S), im_dst),                         # alias seed
+        ] + [
+            pl.BlockSpec(w.shape, lambda *a: (0, 0)) for w in ws  # resident
+        ],
+        out_specs=pl.BlockSpec((1, S), im_dst),
+        scratch_shapes=[pltpu.VMEM((A, S), jnp.float32),          # child rows
+                        pltpu.VMEM((n, S), jnp.float32)],         # cotangents
+    )
+    return pl.pallas_call(
+        functools.partial(_bwd_megastep_kernel, kind=kind, A=A, S=S, n=n,
+                          sentinel=sentinel, nw=nw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        input_output_aliases={8: 0},   # g (fourth tensor operand) → out
+        interpret=interpret,
+    )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
+      (node_mask > 0).astype(jnp.int32), scids, perm,
+      buf, g_state, ext, g, *ws)

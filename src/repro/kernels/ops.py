@@ -116,6 +116,46 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
                               node_mask, offset, ext, weights)
 
 
+def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
+                 child_ids: jax.Array, child_mask: jax.Array,
+                 ext_ids: jax.Array, node_mask: jax.Array,
+                 offset: jax.Array, ext: jax.Array,
+                 weights: Tuple[jax.Array, ...],
+                 impl: str = "auto") -> jax.Array:
+    """One fused reverse batching task: recompute the level's gates from
+    the residual node buffer ``buf``, run the cotangent math for the
+    declared gate kind, and scatter-ADD the child-row cotangents into
+    the gradient buffer ``g`` (∂gather = scatter-add, §3.4) — in ONE
+    launch on the pallas backend (``kernels/level_megastep_bwd.py``,
+    grad buffer aliased in place).
+
+    The ``chunked`` fallback is the pre-fusion oracle sweep: the
+    analytic jnp ``level_megastep.level_bwd`` sandwiched between the
+    gather and the XLA scatter-add (same math, same memory profile, no
+    fusion guarantee); ``ref`` is plain autodiff of the naive cell
+    forward (``ref.bwd_megastep``).
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels import level_megastep_bwd as lmb
+        return lmb.bwd_megastep(kind, g, buf, child_ids, ext_ids, node_mask,
+                                offset, ext, weights, interpret=_interpret())
+    if impl == "ref":
+        return ref.bwd_megastep(kind, g, buf, child_ids, child_mask, ext_ids,
+                                node_mask, offset, ext, weights)
+    from repro.kernels import level_megastep as lm
+    M, A = child_ids.shape
+    S = g.shape[1]
+    g_state = jax.lax.dynamic_slice(g, (offset, 0), (M, S)) \
+        * node_mask.astype(g.dtype)[:, None]
+    child = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
+    rows = jnp.take(ext, ext_ids, axis=0)
+    g_child, _, _ = lm.level_bwd(kind, g_state, child, rows, child_mask,
+                                 weights)
+    return ref.scatter_add_rows(g, child_ids.reshape(-1),
+                                g_child.reshape(M * A, S).astype(g.dtype))
+
+
 def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
                      impl: str = "auto") -> jax.Array:
     """``dst[idx[i]] += rows[i]`` with repeats — ∂gather = scatter-add

@@ -252,6 +252,61 @@ def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     return y.astype(x.dtype), s
 
 
+def megastep_cell_state(kind: str, child: jax.Array, rows: jax.Array,
+                        child_mask: jax.Array,
+                        weights: Tuple[jax.Array, ...]) -> jax.Array:
+    """The megastep cell math alone: gathered child rows ``[M, A, S]``
+    plus pulled (eagerly projected) rows ``[M, G]`` → state ``[M, S]``
+    (before node masking).  Shared by the forward oracle below and —
+    via ``jax.vjp`` — by the per-kind backward oracles, so the analytic
+    ``level_megastep.level_bwd`` and the fused backward kernel are
+    both tested against plain autodiff of this naive forward.
+    """
+    M, A = child.shape[:2]
+    if kind == "lstm":
+        wh, b = weights
+        H = wh.shape[0]
+        prev = child[:, 0, :]
+        gates = rows + prev[:, H:] @ wh + b
+        c, h = lstm_gates(gates, prev[:, :H])
+        return jnp.concatenate([c, h], axis=-1)
+    if kind == "treelstm":
+        ui, uf, uo, uu, b = weights
+        H = ui.shape[0]
+        mk = child_mask.astype(child.dtype)[..., None]
+        cs = child * mk
+        c_k, h_k = cs[..., :H], cs[..., H:]
+        h_sum = jnp.sum(h_k, axis=1)
+        xi, xf, xo, xu = jnp.split(rows, 4, axis=-1)
+        bi, bf, bo, bu = jnp.split(b, 4)
+        # Per-child recurrence as a flattened [M*A, H] matmul: XLA CPU
+        # lowers the batched einsum form ~2.5x slower (measured; see
+        # docs/benchmarks.md "CPU fused Tree-LSTM" note).
+        rec_f = (h_k.reshape(M * A, H) @ uf).reshape(M, A, H)
+        c, h = treelstm_gates(
+            xi + h_sum @ ui + bi,
+            xf[:, None, :] + rec_f + bf,
+            xo + h_sum @ uo + bo,
+            xu + h_sum @ uu + bu,
+            c_k, child_mask.astype(child.dtype))
+        return jnp.concatenate([c, h], axis=-1)
+    if kind == "gru":
+        wh, b = weights
+        H = wh.shape[0]
+        h_prev = child[:, 0, :]
+        rec = h_prev @ wh + b
+        z = jax.nn.sigmoid(rows[:, :H] + rec[:, :H])
+        r = jax.nn.sigmoid(rows[:, H: 2 * H] + rec[:, H: 2 * H])
+        n = jnp.tanh(rows[:, 2 * H:] + r * rec[:, 2 * H:])
+        return (1.0 - z) * n + z * h_prev
+    if kind == "treefc":
+        wc, b = weights
+        mk = child_mask.astype(child.dtype)[..., None]
+        cs = (child * mk).reshape(M, -1)                 # [M, A*H] concat
+        return jnp.tanh(cs @ wc + rows + b)
+    raise ValueError(f"unknown megastep gate kind: {kind!r}")
+
+
 def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
                    child_mask: jax.Array, ext_ids: jax.Array,
                    node_mask: jax.Array, offset: jax.Array, ext: jax.Array,
@@ -268,51 +323,55 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
     child = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
     rows = jnp.take(ext, ext_ids, axis=0)
     nm = node_mask.astype(buf.dtype)[:, None]
-    if kind == "lstm":
-        wh, b = weights
-        H = wh.shape[0]
-        prev = child[:, 0, :]
-        gates = rows + prev[:, H:] @ wh + b
-        c, h = lstm_gates(gates, prev[:, :H])
-        state = jnp.concatenate([c, h], axis=-1)
-    elif kind == "treelstm":
-        ui, uf, uo, uu, b = weights
-        H = ui.shape[0]
-        mk = child_mask.astype(buf.dtype)[..., None]
-        cs = child * mk
-        c_k, h_k = cs[..., :H], cs[..., H:]
-        h_sum = jnp.sum(h_k, axis=1)
-        xi, xf, xo, xu = jnp.split(rows, 4, axis=-1)
-        bi, bf, bo, bu = jnp.split(b, 4)
-        # Per-child recurrence as a flattened [M*A, H] matmul: XLA CPU
-        # lowers the batched einsum form ~2.5x slower (measured; see
-        # docs/benchmarks.md "CPU fused Tree-LSTM" note).
-        rec_f = (h_k.reshape(M * A, H) @ uf).reshape(M, A, H)
-        c, h = treelstm_gates(
-            xi + h_sum @ ui + bi,
-            xf[:, None, :] + rec_f + bf,
-            xo + h_sum @ uo + bo,
-            xu + h_sum @ uu + bu,
-            c_k, child_mask.astype(buf.dtype))
-        state = jnp.concatenate([c, h], axis=-1)
-    elif kind == "gru":
-        wh, b = weights
-        H = wh.shape[0]
-        h_prev = child[:, 0, :]
-        rec = h_prev @ wh + b
-        z = jax.nn.sigmoid(rows[:, :H] + rec[:, :H])
-        r = jax.nn.sigmoid(rows[:, H: 2 * H] + rec[:, H: 2 * H])
-        n = jnp.tanh(rows[:, 2 * H:] + r * rec[:, 2 * H:])
-        state = (1.0 - z) * n + z * h_prev
-    elif kind == "treefc":
-        wc, b = weights
-        mk = child_mask.astype(buf.dtype)[..., None]
-        cs = (child * mk).reshape(M, -1)                 # [M, A*H] concat
-        state = jnp.tanh(cs @ wc + rows + b)
-    else:
-        raise ValueError(f"unknown megastep gate kind: {kind!r}")
+    state = megastep_cell_state(kind, child, rows,
+                                child_mask.astype(buf.dtype), weights)
     return jax.lax.dynamic_update_slice(
         buf, (state * nm).astype(buf.dtype), (offset, 0))
+
+
+def level_bwd(kind: str, g_state: jax.Array, child: jax.Array,
+              rows: jax.Array, child_mask: jax.Array,
+              weights: Tuple[jax.Array, ...]
+              ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
+    """Per-kind backward ORACLE: plain ``jax.vjp`` through the naive
+    cell forward — no hand-derived math whatsoever.  Ground truth for
+    the analytic ``level_megastep.level_bwd``/``level_param_grads`` and
+    (through them) the fused backward kernel.
+
+    Returns ``(g_child, d_rows, w_grads)``: the child-mask-masked
+    ``[M, A, S]`` cotangent to scatter-add, the ``[M, G]`` pulled-row
+    cotangent, and the weight cotangents in ``weights`` order.
+    """
+    def f(child, rows, weights):
+        return megastep_cell_state(kind, child, rows, child_mask, weights)
+
+    _, vjp = jax.vjp(f, child, rows, tuple(weights))
+    g_child, d_rows, w_grads = vjp(g_state)
+    # The LSTM/GRU forwards rely on sentinel zeros instead of mask
+    # arithmetic, so their raw vjp leaves masked child rows nonzero;
+    # the sweep must push exact zeros at the sentinel (cf. the analytic
+    # backward's masking).
+    return g_child * child_mask[..., None], d_rows, w_grads
+
+
+def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
+                 child_ids: jax.Array, child_mask: jax.Array,
+                 ext_ids: jax.Array, node_mask: jax.Array,
+                 offset: jax.Array, ext: jax.Array,
+                 weights: Tuple[jax.Array, ...]) -> jax.Array:
+    """Oracle for ``kernels/level_megastep_bwd.bwd_megastep``: one
+    reverse batching task as slice → autodiff cell backward →
+    scatter-add, returning the updated gradient buffer."""
+    M, A = child_ids.shape
+    S = g.shape[1]
+    g_state = jax.lax.dynamic_slice(g, (offset, 0), (M, S)) \
+        * node_mask.astype(g.dtype)[:, None]
+    child = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
+    rows = jnp.take(ext, ext_ids, axis=0)
+    g_child, _, _ = level_bwd(kind, g_state, child, rows,
+                              child_mask.astype(g.dtype), weights)
+    return scatter_add_rows(g, child_ids.reshape(-1),
+                            g_child.reshape(M * A, S).astype(g.dtype))
 
 
 def lstm_level_fused(h_prev, c_prev, ext_proj, wh, b):

@@ -342,11 +342,12 @@ def test_fusion_mode_megastep_requires_gate_spec():
                 jnp.zeros((4, 2)), hoist=False, fusion_mode="megastep")
 
 
-def test_fusion_mode_treefc_arity_mismatch():
+def test_fusion_mode_treefc_arity_mismatch(monkeypatch):
     """Tree-FC's concat weight fixes the gather arity: a schedule packed
     at a different A must raise under "megastep" and resolve to the
     op-by-op path (spec None) under "auto"."""
     from repro.core.scheduler import resolve_fusion
+    monkeypatch.delenv("REPRO_FUSION", raising=False)   # CI matrix sets it
     fn = TreeFCVertex(input_dim=2, hidden=3)          # arity 2
     params = fn.init(jax.random.PRNGKey(0))
     sched = pack_batch([chain(3)])                    # chains pack at A=1

@@ -88,6 +88,7 @@ def test_decode_respects_fusion_env(monkeypatch):
     the same env contract as the training scheduler."""
     fn = GRUVertex(input_dim=4, hidden=3)
     params = fn.init(jax.random.PRNGKey(2))
+    monkeypatch.delenv("REPRO_FUSION", raising=False)   # CI matrix sets it
     eng_auto = VertexServeEngine(fn, params, num_slots=2)
     assert eng_auto.fused
     monkeypatch.setenv("REPRO_FUSION", "none")
