@@ -1,5 +1,5 @@
 """Paper Fig. 9: graph construction/preprocessing overhead vs
-computation.
+computation — plus the schedule-compilation pipeline that removes it.
 
 Cavs reads the input graph "through I/O": per minibatch the only
 structure work is the host-side level packing (pure NumPy).  The
@@ -9,6 +9,13 @@ jax re-trace + re-compile time of the same step.
 
 Outputs both axes of Fig. 9: absolute seconds and the fraction of the
 total step the structure work takes.
+
+The ``pipeline/*`` rows measure the schedule pipeline (PR 4): packs/sec
+cold (``pack_batch`` from scratch) vs on the fingerprint-cache hit path
+(acceptance: ≥5x), and compiled-shape counts tight vs bucketed over a
+stream of random minibatches.  ``--assert-cache`` additionally enforces
+the CI cache-effectiveness gate: a second epoch over the same synthetic
+corpus must hit ≥90%.
 """
 
 from __future__ import annotations
@@ -23,7 +30,10 @@ import numpy as np
 from benchmarks.common import Collector, time_fn
 from repro.configs.paper import get_paper_model
 from repro.core.scheduler import execute
-from repro.core.structure import fit_bucket, pack_batch, pack_external
+from repro.core.structure import (fit_bucket, pack_batch, pack_external,
+                                  random_binary_tree)
+from repro.pipeline import (BucketPolicy, ScheduleCache, SchedulePipeline,
+                            ShapeCensus)
 
 
 def bench(col: Collector, leaves_list, bs: int = 16, hidden: int = 32):
@@ -68,15 +78,95 @@ def bench(col: Collector, leaves_list, bs: int = 16, hidden: int = 32):
                 f"leaves={leaves}")
 
 
+def _mean_pack_seconds(pack_once, n_batches: int, repeats: int = 3) -> float:
+    """Mean seconds per pack over ``repeats`` sweeps of ``n_batches``."""
+    best = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for i in range(n_batches):
+            pack_once(i)
+        best.append((time.perf_counter() - t0) / n_batches)
+    return float(np.median(best))
+
+
+def bench_pipeline(col: Collector, *, n_topologies: int = 24, bs: int = 16,
+                   epochs: int = 3, assert_cache: bool = False):
+    """Schedule-pipeline rows: cache-hit vs cold packs/sec, hit rate
+    over repeated epochs, and tight-vs-bucketed compile counts."""
+    rng = np.random.default_rng(0)
+    # A synthetic corpus of batches whose topologies REPEAT across
+    # epochs (the real-corpus property the cache exploits).
+    corpus = []
+    for _ in range(n_topologies):
+        corpus.append([random_binary_tree(int(rng.integers(4, 24)), rng)
+                       for _ in range(bs)])
+
+    # --- cold vs cache-hit packs/sec ----------------------------------
+    cold = ScheduleCache(enabled=False)
+    t_cold = _mean_pack_seconds(lambda i: cold.get_or_pack(corpus[i]),
+                                len(corpus))
+    warm = ScheduleCache(enabled=True)
+    for g in corpus:
+        warm.get_or_pack(g)              # populate
+    t_hit = _mean_pack_seconds(lambda i: warm.get_or_pack(corpus[i]),
+                               len(corpus))
+    col.add("pipeline/cold_packs_per_s", 1.0 / t_cold, "packs/s",
+            f"bs={bs} pack_batch from scratch")
+    col.add("pipeline/cachehit_packs_per_s", 1.0 / t_hit, "packs/s",
+            f"bs={bs} fingerprint lookup")
+    speedup = t_cold / t_hit
+    col.add("pipeline/cachehit_speedup", speedup, "x",
+            f"acceptance: >=5x (got {speedup:.1f}x)")
+
+    # --- cache effectiveness over epochs (the CI gate) ----------------
+    pipe = SchedulePipeline(1, bucket_policy=BucketPolicy())
+    for _ in range(epochs):
+        for g in corpus:
+            pipe.cache.get_or_pack(g, pipe.pads_for(g))
+    epoch2 = ScheduleCache(enabled=True)
+    for g in corpus:
+        epoch2.get_or_pack(g)
+    epoch2.reset_stats()
+    for g in corpus:                      # the second epoch, isolated
+        epoch2.get_or_pack(g)
+    col.add("pipeline/epoch2_hit_rate", epoch2.hit_rate, "frac",
+            f"{n_topologies} batches, identical corpus")
+    col.add("pipeline/steady_hit_rate", pipe.cache.hit_rate, "frac",
+            f"{epochs} epochs x {n_topologies} batches")
+    if assert_cache and epoch2.hit_rate < 0.9:
+        raise AssertionError(
+            f"cache-effectiveness gate: second-epoch hit rate "
+            f"{epoch2.hit_rate:.2f} < 0.90")
+
+    # --- tight vs bucketed compile counts -----------------------------
+    tight_census, bucket_census = ShapeCensus(), ShapeCensus()
+    policy = BucketPolicy(mode="pow2")
+    for g in corpus:
+        tight_census.record(pack_batch(g))
+        bucket_census.record(pack_batch(g, *policy.bucket(g)))
+    col.add("pipeline/compile_count_tight", tight_census.num_shapes,
+            "programs", f"{n_topologies} minibatches, tight pads")
+    col.add("pipeline/compile_count_bucketed", bucket_census.num_shapes,
+            "programs", f"{n_topologies} minibatches, pow2 buckets")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--assert-cache", action="store_true",
+                    help="fail unless the second epoch over the same "
+                         "corpus hits >=90%% in the schedule cache")
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="skip the Fig. 9 compute/retrace sweeps and run "
+                         "only the host-side pipeline rows (the CI gate)")
     args = ap.parse_args(argv)
     col = Collector()
-    if args.full:
-        bench(col, leaves_list=(32, 64, 128, 256, 512, 1024))
-    else:
-        bench(col, leaves_list=(32, 128))
+    if not args.pipeline_only:
+        bench(col, leaves_list=(32, 64, 128, 256, 512, 1024) if args.full
+              else (32, 128))
+    bench_pipeline(col, **({"n_topologies": 48, "bs": 32} if args.full
+                           else {}),
+                   assert_cache=args.assert_cache)
     return col
 
 

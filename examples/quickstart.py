@@ -12,8 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import execute_lazy, readout_roots
-from repro.core.structure import pack_batch, pack_external, random_binary_tree
+from repro.core.structure import random_binary_tree
 from repro.models.treelstm import TreeLSTMVertex
+from repro.pipeline import SchedulePipeline
 
 # --- 1. declare F once (the static vertex function) ----------------------
 fn = TreeLSTMVertex(input_dim=32, hidden=64, arity=2)
@@ -25,18 +26,17 @@ graphs = [random_binary_tree(int(rng.integers(4, 20)), rng) for _ in range(8)]
 inputs = [rng.standard_normal((g.num_nodes, 32)).astype(np.float32) * 0.1
           for g in graphs]
 
-# --- 3. pack the minibatch into a level schedule (host-side, NumPy) ------
-# Pad to a bucket so later minibatches reuse this compiled program.
-PAD = dict(pad_levels=20, pad_width=160, pad_arity=2, pad_nodes=40)
-sched = pack_batch(graphs, **PAD)
-ext = jnp.asarray(pack_external(inputs, sched, 32))
-dev = sched.to_device()
-print(f"packed {len(graphs)} trees: {sched.T} levels × {sched.M} slots, "
-      f"occupancy {sched.occupancy:.0%}")
+# --- 3. the schedule pipeline packs the minibatch (host-side, NumPy): ----
+# topology-fingerprint cache + shape buckets, so repeated topologies
+# skip packing and near-miss batches reuse one compiled program.
+pipe = SchedulePipeline(ext_dim=32)
+batch = pipe.pack(graphs, inputs)
+print(f"packed {len(graphs)} trees: {batch.sched.T} levels × "
+      f"{batch.sched.M} slots, occupancy {batch.sched.occupancy:.0%}")
 
 # --- 4. batched training step: schedule F over G, lazy-batched grads -----
 @jax.jit
-def train_step(p, e):
+def train_step(p, e, dev):
     def loss(pp):
         buf = execute_lazy(fn, pp, e, dev)        # Alg. 1 + §3.5 lazy
         root_h = readout_roots(buf, dev)[:, 64:]  # [K, hidden]
@@ -44,15 +44,15 @@ def train_step(p, e):
     l, g = jax.value_and_grad(loss)(p)
     return l, jax.tree.map(lambda w, gw: w - 0.1 * gw, p, g)
 
-loss, params = train_step(params, ext)
+loss, params = train_step(params, batch.ext, batch.dev)
 print(f"one batched step OK — loss {float(loss):.5f}")
 print("the SAME compiled program serves any other batch of trees:")
 graphs2 = [random_binary_tree(int(rng.integers(4, 20)), rng)
            for _ in range(8)]
-sched2 = pack_batch(graphs2, **PAD)
 inputs2 = [rng.standard_normal((g.num_nodes, 32)).astype(np.float32) * 0.1
            for g in graphs2]
-ext2 = jnp.asarray(pack_external(inputs2, sched2, 32))
-loss2, params = train_step(params, ext2)   # no re-trace, no re-compile
+batch2 = pipe.pack(graphs2, inputs2)       # same bucket → no re-compile
+loss2, params = train_step(params, batch2.ext, batch2.dev)
 print(f"second batch, zero graph-construction overhead — "
       f"loss {float(loss2):.5f}")
+print(f"pipeline stats: {pipe.stats()}")

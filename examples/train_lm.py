@@ -17,6 +17,7 @@ from repro.configs import get_config
 from repro.configs.archs import reduced
 from repro.data import lm_batches, synthetic_corpus
 from repro.models.transformer import TransformerLM
+from repro.pipeline import AsyncPacker
 from repro.train import MetricLogger, TrainConfig, Trainer
 
 
@@ -51,7 +52,14 @@ def main():
         print(f"resumed from checkpoint at step {start}")
 
     corpus = synthetic_corpus(3_000_000, cfg.vocab, seed=0)
-    batches = lm_batches(corpus, args.batch, args.seq, seed=0)
+    # The schedule pipeline's async packing stage doubles as a device
+    # stager for plain token batches: host batch assembly + transfer
+    # overlap with the previous step's compute (Trainer.fit closes the
+    # background producer when the loop exits).
+    batches = AsyncPacker(
+        lm_batches(corpus, args.batch, args.seq, seed=0),
+        lambda b: {k: jax.device_put(np.asarray(v)) for k, v in b.items()},
+        depth=2)
     logger = MetricLogger(tokens_per_step=args.batch * args.seq)
     state, logger = trainer.fit(state, batches, steps=args.steps,
                                 logger=logger)

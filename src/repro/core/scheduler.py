@@ -232,19 +232,30 @@ def _megastep_bwd(fn, res, g_buf):
     S = spec.state_dim
     g_buf = g_buf.astype(jnp.float32)
 
+    # Sorted-run arrays travel with the schedule (precomputed host-side
+    # in pack_batch) so the reverse scan body contains NO sort op; a
+    # hand-built DeviceSchedule without them falls back to the kernel's
+    # on-device argsort.
+    have_runs = sched.sort_perm is not None \
+        and sched.sorted_child_ids is not None and sched.run_head is not None
+
     def rev_step(g, xs):
-        t, child_ids, child_mask, ext_ids, node_mask = xs
+        t, child_ids, child_mask, ext_ids, node_mask = xs[:5]
+        sp, sc, rh = xs[5:] if have_runs else (None, None, None)
         # One fused reverse megastep: the level's state cotangent is
         # turned into child-row cotangents and scatter-ADDED into the
         # carried gradient buffer in place (on the pallas backend a
         # single launch mirroring the forward; off-pallas the jnp
         # ``level_bwd`` sweep — the correctness oracle).
         g = kops.bwd_megastep(spec.kind, g, buf, child_ids, child_mask,
-                              ext_ids, node_mask, t * M, ext, weights)
+                              ext_ids, node_mask, t * M, ext, weights,
+                              sort_perm=sp, sorted_child_ids=sc, run_head=rh)
         return g, None
 
     xs = (jnp.arange(T, dtype=jnp.int32), sched.child_ids, sched.child_mask,
           sched.ext_ids, sched.node_mask)
+    if have_runs:
+        xs = xs + (sched.sort_perm, sched.sorted_child_ids, sched.run_head)
     g_final, _ = jax.lax.scan(rev_step, g_buf, xs, reverse=True)
     # Row t*M+m reaches its final value before level t's reverse step
     # runs (all its parents live at levels > t), so the swept buffer IS

@@ -65,7 +65,21 @@ class InputGraph:
         return len(self.children)
 
     def levels(self) -> np.ndarray:
-        """Topological level of each vertex (leaves = 0). Raises on cycles."""
+        """Topological level of each vertex (leaves = 0). Raises on cycles.
+
+        Memoized: the schedule pipeline derives levels once for
+        bucketing and once for packing, and topologies are immutable
+        once they enter a batch.  (Mutating ``children`` after the first
+        call is unsupported — rebuild the graph instead.)
+        """
+        cached = getattr(self, "_levels_cache", None)
+        if cached is not None:
+            return cached
+        lvl = self._levels_uncached()
+        self._levels_cache = lvl
+        return lvl
+
+    def _levels_uncached(self) -> np.ndarray:
         n = self.num_nodes
         lvl = np.full(n, -1, np.int64)
         # Kahn-style: process in waves.
@@ -184,6 +198,15 @@ class LevelSchedule:
     node_valid: np.ndarray  # [K, N] float32
     root_slots: np.ndarray  # [K] int32 (first root per sample)
     num_nodes: np.ndarray   # [K] int32
+    # Sorted-run precompute for the fused backward (∂gather = scatter-add
+    # under the sorted-run discipline): per level, the stable argsort of
+    # the flat [M*A] child_ids, the ids in sorted order, and the run
+    # boundaries (1 where a new destination run starts).  Host-side data
+    # like the rest of the schedule — carrying it here removes the T
+    # per-level XLA sorts from every grad step's reverse scan.
+    sort_perm: Optional[np.ndarray] = None        # [T, M*A] int32
+    sorted_child_ids: Optional[np.ndarray] = None  # [T, M*A] int32
+    run_head: Optional[np.ndarray] = None          # [T, M*A] int32 (0/1)
 
     @property
     def T(self) -> int:
@@ -224,6 +247,9 @@ class LevelSchedule:
         return float(self.node_mask.sum()) / max(1, self.num_slots)
 
     def to_device(self) -> "DeviceSchedule":
+        def _opt(x):
+            return None if x is None else jnp.asarray(x)
+
         return DeviceSchedule(
             child_ids=jnp.asarray(self.child_ids),
             child_mask=jnp.asarray(self.child_mask),
@@ -232,6 +258,9 @@ class LevelSchedule:
             slot_of=jnp.asarray(self.slot_of),
             node_valid=jnp.asarray(self.node_valid),
             root_slots=jnp.asarray(self.root_slots),
+            sort_perm=_opt(self.sort_perm),
+            sorted_child_ids=_opt(self.sorted_child_ids),
+            run_head=_opt(self.run_head),
         )
 
 
@@ -247,6 +276,12 @@ class DeviceSchedule:
     slot_of: jax.Array
     node_valid: jax.Array
     root_slots: jax.Array
+    # Precomputed sorted runs for the fused backward (see LevelSchedule);
+    # ``None`` on hand-built schedules — consumers must fall back to the
+    # on-device argsort.
+    sort_perm: Optional[jax.Array] = None
+    sorted_child_ids: Optional[jax.Array] = None
+    run_head: Optional[jax.Array] = None
 
     @property
     def T(self) -> int:
@@ -265,6 +300,31 @@ class DeviceSchedule:
         return self.T * self.M
 
 
+def _tight_stats(graphs: Sequence[InputGraph]):
+    """Per-graph stats behind the tight dims: (levels, depths, per-level
+    width counts across the batch, arities, sizes).  Shared by
+    ``pack_batch`` and :func:`tight_dims` so the bucket policy can never
+    drift from what packing actually requires."""
+    levels = [g.levels() for g in graphs]
+    depths = [int(l.max()) + 1 for l in levels]
+    counts = np.zeros(max(depths), np.int64)
+    for l in levels:
+        for t, c in zip(*np.unique(l, return_counts=True)):
+            counts[t] += c
+    arities = [max(g.max_arity, 1) for g in graphs]
+    sizes = [g.num_nodes for g in graphs]
+    return levels, depths, counts, arities, sizes
+
+
+def tight_dims(graphs: Sequence[InputGraph]) -> Tuple[int, int, int, int]:
+    """The ``(T, M, A, N)`` a tight ``pack_batch`` of ``graphs`` yields
+    (the dims the pipeline's bucket policy quantizes up)."""
+    if not graphs:
+        raise ValueError("empty batch")
+    _, depths, counts, arities, sizes = _tight_stats(graphs)
+    return max(depths), int(counts.max()), max(arities), max(sizes)
+
+
 def pack_batch(
     graphs: Sequence[InputGraph],
     pad_levels: Optional[int] = None,
@@ -281,33 +341,42 @@ def pack_batch(
     K = len(graphs)
     if K == 0:
         raise ValueError("empty batch")
-    levels = [g.levels() for g in graphs]
-    T = max(int(l.max()) + 1 for l in levels)
-    A = max(g.max_arity for g in graphs)
-    A = max(A, 1)
-    N = max(g.num_nodes for g in graphs)
+    levels, depths, counts, arities, sizes = _tight_stats(graphs)
+    T = max(depths)
+    A = max(arities)
+    N = max(sizes)
     if pad_levels is not None:
         if pad_levels < T:
-            raise ValueError(f"pad_levels={pad_levels} < required T={T}")
+            k = int(np.argmax(depths))
+            raise ValueError(
+                f"pad_levels={pad_levels} < required T={T} "
+                f"(graph {k} has {depths[k]} levels)")
         T = pad_levels
     if pad_arity is not None:
         if pad_arity < A:
-            raise ValueError(f"pad_arity={pad_arity} < required A={A}")
+            k = int(np.argmax(arities))
+            raise ValueError(
+                f"pad_arity={pad_arity} < required A={A} "
+                f"(graph {k} has a vertex of arity {arities[k]})")
         A = pad_arity
     if pad_nodes is not None:
         if pad_nodes < N:
-            raise ValueError(f"pad_nodes={pad_nodes} < required N={N}")
+            k = int(np.argmax(sizes))
+            raise ValueError(
+                f"pad_nodes={pad_nodes} < required N={N} "
+                f"(graph {k} has {sizes[k]} nodes)")
         N = pad_nodes
 
-    # Width of each batching task V_t across the whole minibatch.
-    counts = np.zeros(T, np.int64)
-    for l in levels:
-        for t, c in zip(*np.unique(l, return_counts=True)):
-            counts[t] += c
     M = int(counts.max())
     if pad_width is not None:
         if pad_width < M:
-            raise ValueError(f"pad_width={pad_width} < required M={M}")
+            t = int(np.argmax(counts))
+            widths = [int(np.sum(l == t)) for l in levels]
+            k = int(np.argmax(widths))
+            raise ValueError(
+                f"pad_width={pad_width} < required M={M} (level {t} is "
+                f"widest; graph {k} alone contributes {widths[k]} of its "
+                f"{M} slots)")
         M = pad_width
 
     sentinel = T * M
@@ -341,11 +410,33 @@ def pack_batch(
         r = g.roots()[0] if g.roots() else g.num_nodes - 1
         root_slots[k] = slot_of[k, r]
 
+    sort_perm, sorted_cids, run_head = _sorted_runs(child_ids)
     return LevelSchedule(
         child_ids=child_ids, child_mask=child_mask, ext_ids=ext_ids,
         node_mask=node_mask, slot_of=slot_of, node_valid=node_valid,
         root_slots=root_slots, num_nodes=num_nodes,
+        sort_perm=sort_perm, sorted_child_ids=sorted_cids,
+        run_head=run_head,
     )
+
+
+def _sorted_runs(child_ids: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-level sorted-run precompute for the fused backward.
+
+    For each level the flat ``[M*A]`` child ids are stably argsorted so
+    duplicate destinations become adjacent; ``run_head`` marks the first
+    contribution of each destination run.  This is the preprocessing the
+    reverse megastep previously did on device (one XLA sort per level,
+    every grad step) — the schedule is data, so it belongs here.
+    """
+    T = child_ids.shape[0]
+    flat = child_ids.reshape(T, -1).astype(np.int32)
+    perm = np.argsort(flat, axis=1, kind="stable").astype(np.int32)
+    scids = np.take_along_axis(flat, perm, axis=1)
+    head = np.ones_like(scids)
+    head[:, 1:] = (scids[:, 1:] != scids[:, :-1]).astype(np.int32)
+    return perm, scids, head
 
 
 # ---------------------------------------------------------------------------

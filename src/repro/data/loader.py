@@ -20,6 +20,69 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import numpy as np
 
 
+class BackgroundPrefetcher:
+    """The shared prefetch discipline: a daemon thread repeatedly calls
+    ``produce`` and parks results in a bounded queue (double/triple
+    buffering), so the consumer never waits on host-side work.
+
+    ``produce`` signals exhaustion by raising ``StopIteration``; any
+    other exception is captured and re-raised on the CONSUMER thread at
+    the point in the stream where it occurred.  Used by
+    :class:`PrefetchLoader` (batch generation) and by the schedule
+    pipeline's async packing stage (``repro.pipeline.prefetch``).
+    """
+
+    def __init__(self, produce: Callable[[], Any], *, depth: int = 2):
+        self._produce = produce
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._terminal: Optional[BaseException] = None   # latched end state
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            terminal = False
+            try:
+                item = (True, self._produce())
+            except StopIteration:
+                item, terminal = (False, None), True
+            except BaseException as e:  # noqa: BLE001 — re-raised downstream
+                item, terminal = (False, e), True
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if terminal:
+                return
+
+    def __iter__(self) -> "BackgroundPrefetcher":
+        return self
+
+    def __next__(self) -> Any:
+        # The worker exits after its first terminal event, so the end
+        # state is LATCHED: every call after exhaustion/error re-raises
+        # instead of blocking forever on a queue no producer feeds.
+        if self._terminal is not None:
+            raise self._terminal
+        ok, item = self._q.get()
+        if ok:
+            return item
+        self._terminal = item if item is not None else StopIteration()
+        raise self._terminal
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
 class ShardedSource:
     """A deterministic, restartable batch source for one data shard.
 
@@ -57,11 +120,8 @@ class PrefetchLoader:
         self.spare = spare
         self.deadline_s = deadline_s
         self.delay_fn = delay_fn          # test hook: inject slowness
-        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
-        self._stop = threading.Event()
         self.takeovers = 0                # straggler events observed
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        self._bg = BackgroundPrefetcher(self._produce_one, depth=depth)
 
     # -- producer ---------------------------------------------------------
     def _produce_one(self) -> Any:
@@ -80,35 +140,12 @@ class PrefetchLoader:
                 time.sleep(delay)
         return self.source.next_batch()
 
-    def _worker(self) -> None:
-        while not self._stop.is_set():
-            try:
-                b = self._produce_one()
-            except StopIteration:
-                self._q.put(None)
-                return
-            while not self._stop.is_set():
-                try:
-                    self._q.put(b, timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-
     # -- consumer ---------------------------------------------------------
     def __iter__(self):
         return self
 
     def __next__(self):
-        b = self._q.get()
-        if b is None:
-            raise StopIteration
-        return b
+        return next(self._bg)
 
     def close(self) -> None:
-        self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=2.0)
+        self._bg.close()

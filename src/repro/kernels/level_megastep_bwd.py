@@ -25,9 +25,15 @@ read-after-write hazard under the double-buffered pipeline whenever a
 block is REVISITED.  The fused kernel sidesteps the hazard with a
 **sorted-run** discipline instead of the column stripes of PR 2:
 
-  * outside the kernel, the level's flat ``child_ids`` are argsorted
-    (runtime data — the schedule is data, §3.2), so duplicate
-    destinations become ADJACENT grid steps;
+  * outside the kernel, the level's flat ``child_ids`` are argsorted so
+    duplicate destinations become ADJACENT grid steps.  The sort is
+    pure schedule preprocessing (the schedule is data, §3.2), so
+    ``pack_batch`` now precomputes the permutation, the sorted ids and
+    the run boundaries host-side and carries them in
+    ``LevelSchedule.sort_perm`` / ``.sorted_child_ids`` / ``.run_head``
+    — a grad step runs ZERO device sorts.  Callers without a packed
+    schedule (hand-built levels, the serving tick) may omit them and
+    pay one ``jnp.argsort`` here;
   * the grid is ``(2·M·A,)``: the first ``M·A`` steps stream child
     rows HBM→VMEM and stash the per-slot cotangent rows in a VMEM
     scratch carry; the last ``M·A`` steps walk contributions in sorted
@@ -151,9 +157,9 @@ def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _bwd_megastep_kernel(cids_ref, eids_ref, nmask_ref, scids_ref, perm_ref,
-                         child_ref, gstate_ref, ext_ref, dst_ref, *rest,
-                         kind: str, A: int, S: int, n: int, sentinel: int,
-                         nw: int):
+                         rhead_ref, child_ref, gstate_ref, ext_ref, dst_ref,
+                         *rest, kind: str, A: int, S: int, n: int,
+                         sentinel: int, nw: int):
     w_refs = rest[:nw]
     out_ref = rest[nw]
     chd_ref, gch_ref = rest[nw + 1:]
@@ -187,10 +193,9 @@ def _bwd_megastep_kernel(cids_ref, eids_ref, nmask_ref, scids_ref, perm_ref,
     @pl.when(i >= n)
     def _scatter():
         k = i - n
-        is_run_head = jnp.logical_or(
-            k == 0, scids_ref[jnp.maximum(k - 1, 0)] != scids_ref[k])
-
-        @pl.when(is_run_head)
+        # Run boundaries are precomputed with the schedule (host-side,
+        # pack_batch._sorted_runs) — the kernel only reads the flag.
+        @pl.when(rhead_ref[k] == 1)
         def _seed():
             out_ref[...] = dst_ref[...]
 
@@ -201,6 +206,9 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
                  child_ids: jax.Array, ext_ids: jax.Array,
                  node_mask: jax.Array, offset: jax.Array, ext: jax.Array,
                  weights: Tuple[jax.Array, ...], *,
+                 sort_perm: jax.Array = None,
+                 sorted_child_ids: jax.Array = None,
+                 run_head: jax.Array = None,
                  interpret: bool = False) -> jax.Array:
     """One fused reverse batching task, in place.
 
@@ -210,36 +218,48 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
     recompute source, read-only); ``offset``: scalar ``t*M``.  Returns
     the updated gradient buffer; rows ``[offset, offset+M)`` and every
     untouched row are preserved bit-exact.
+
+    ``sort_perm`` / ``sorted_child_ids`` / ``run_head`` (each flat
+    ``[M*A]``) are the level's precomputed sorted runs — ``pack_batch``
+    computes them host-side with the rest of the schedule, so a training
+    step pays ZERO on-device sorts.  When omitted (hand-built levels,
+    the serving tick) they are derived here with one ``jnp.argsort``.
     """
     M, A = child_ids.shape
     S = g.shape[1]
     G = ext.shape[1]
     n = M * A
     sentinel = g.shape[0] - 1
-    cflat = child_ids.reshape(-1).astype(jnp.int32)
-    # Sorted-run preprocessing (runtime data, like the schedule itself):
-    # duplicate destinations become adjacent, so each output row is one
-    # contiguous run of grid steps — no block revisits, no RAW hazard.
-    perm = jnp.argsort(cflat).astype(jnp.int32)
-    scids = cflat[perm]
+    if sort_perm is None or sorted_child_ids is None or run_head is None:
+        # Sorted-run preprocessing (runtime data, like the schedule
+        # itself): duplicate destinations become adjacent, so each
+        # output row is one contiguous run of grid steps — no block
+        # revisits, no RAW hazard.
+        cflat = child_ids.reshape(-1).astype(jnp.int32)
+        sort_perm = jnp.argsort(cflat).astype(jnp.int32)
+        sorted_child_ids = cflat[sort_perm]
+        run_head = jnp.concatenate([
+            jnp.ones((1,), jnp.int32),
+            (sorted_child_ids[1:] != sorted_child_ids[:-1]).astype(jnp.int32),
+        ])
     # The level's own cotangent block is read-only at this level
     # (children live at levels < t), so a [M, S] slice feeds the kernel.
     g_state = jax.lax.dynamic_slice(g, (offset, 0), (M, S))
     ws = tuple(w if w.ndim == 2 else w[None, :] for w in weights)
     nw = len(ws)
 
-    def im_child(g0, c, e, m_, s_, p_):
+    def im_child(g0, c, e, m_, s_, p_, r_):
         gg = jnp.minimum(g0, n - 1)          # phase-2 steps: harmless reload
         return (c[gg // A, gg % A], 0)
 
-    def im_ext(g0, c, e, m_, s_, p_):
+    def im_ext(g0, c, e, m_, s_, p_, r_):
         return (e[jnp.minimum(g0, n - 1) // A], 0)
 
-    def im_dst(g0, c, e, m_, s_, p_):
+    def im_dst(g0, c, e, m_, s_, p_, r_):
         return (s_[jnp.clip(g0 - n, 0, n - 1)], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=6,
         grid=(2 * n,),
         in_specs=[
             pl.BlockSpec((1, S), im_child),                       # gather
@@ -258,8 +278,10 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
                           sentinel=sentinel, nw=nw),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
-        input_output_aliases={8: 0},   # g (fourth tensor operand) → out
+        input_output_aliases={9: 0},   # g (fourth tensor operand) → out
         interpret=interpret,
     )(child_ids.astype(jnp.int32), ext_ids.astype(jnp.int32),
-      (node_mask > 0).astype(jnp.int32), scids, perm,
+      (node_mask > 0).astype(jnp.int32),
+      sorted_child_ids.astype(jnp.int32), sort_perm.astype(jnp.int32),
+      run_head.astype(jnp.int32),
       buf, g_state, ext, g, *ws)

@@ -121,7 +121,10 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
                  ext_ids: jax.Array, node_mask: jax.Array,
                  offset: jax.Array, ext: jax.Array,
                  weights: Tuple[jax.Array, ...],
-                 impl: str = "auto") -> jax.Array:
+                 impl: str = "auto", *,
+                 sort_perm: Optional[jax.Array] = None,
+                 sorted_child_ids: Optional[jax.Array] = None,
+                 run_head: Optional[jax.Array] = None) -> jax.Array:
     """One fused reverse batching task: recompute the level's gates from
     the residual node buffer ``buf``, run the cotangent math for the
     declared gate kind, and scatter-ADD the child-row cotangents into
@@ -134,12 +137,20 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
     gather and the XLA scatter-add (same math, same memory profile, no
     fusion guarantee); ``ref`` is plain autodiff of the naive cell
     forward (``ref.bwd_megastep``).
+
+    ``sort_perm``/``sorted_child_ids``/``run_head``: the level's
+    precomputed sorted runs (``pack_batch`` host-side output, carried in
+    ``DeviceSchedule``) — when given, the pallas backend runs no device
+    sort; the jnp fallbacks don't need them and ignore them.
     """
     impl = _default_impl() if impl == "auto" else impl
     if impl == "pallas":
         from repro.kernels import level_megastep_bwd as lmb
         return lmb.bwd_megastep(kind, g, buf, child_ids, ext_ids, node_mask,
-                                offset, ext, weights, interpret=_interpret())
+                                offset, ext, weights,
+                                sort_perm=sort_perm,
+                                sorted_child_ids=sorted_child_ids,
+                                run_head=run_head, interpret=_interpret())
     if impl == "ref":
         return ref.bwd_megastep(kind, g, buf, child_ids, child_mask, ext_ids,
                                 node_mask, offset, ext, weights)

@@ -1,0 +1,16 @@
+"""Schedule-compilation pipeline: fingerprint → cache → bucket → pack →
+async prefetch (see ``pipeline.py`` for the architecture note)."""
+
+from repro.pipeline.buckets import (BucketPolicy, PadDims, ShapeCensus,
+                                    TIGHT, tight_dims)
+from repro.pipeline.cache import ScheduleCache, cache_enabled_default
+from repro.pipeline.fingerprint import batch_fingerprint, graph_fingerprint
+from repro.pipeline.pipeline import PackedBatch, SchedulePipeline
+from repro.pipeline.prefetch import AsyncPacker
+
+__all__ = [
+    "AsyncPacker", "BucketPolicy", "PackedBatch", "PadDims",
+    "ScheduleCache", "SchedulePipeline", "ShapeCensus", "TIGHT",
+    "batch_fingerprint", "cache_enabled_default", "graph_fingerprint",
+    "tight_dims",
+]

@@ -1,0 +1,119 @@
+"""The schedule cache (stage 2 of the schedule pipeline).
+
+Repeated topologies are the common case in real corpora — short
+sentences are all the same chain, balanced trees recur at every power
+of two — and ``pack_batch`` is a pure function of (topologies, pads),
+so its output is memoizable: an LRU keyed by the batch topology
+fingerprint returns the previously packed :class:`LevelSchedule`
+(and its device-resident twin, skipping the host→device transfer too).
+
+Soundness: cached schedules are returned BY REFERENCE.  That is safe
+because every consumer treats the schedule as read-only data (it is the
+paper's per-sample input ``G``, "read through I/O"); nothing in the
+scheduler, the kernels or the readouts writes to it.
+
+The cache is process-local and bounded (default 128 entries ≈ a few MB
+for typical schedules); eviction is least-recently-used.  Set the env
+var ``REPRO_SCHED_CACHE=0`` to disable caching globally (every lookup
+cold-packs — the ablation/debug setting, exercised as a CI leg).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
+                                  pack_batch)
+from repro.pipeline.fingerprint import batch_fingerprint
+
+Pads = Tuple[Optional[int], Optional[int], Optional[int], Optional[int]]
+
+
+def cache_enabled_default() -> bool:
+    """The ``REPRO_SCHED_CACHE`` env gate (unset / "1" = on)."""
+    return os.environ.get("REPRO_SCHED_CACHE", "1") != "0"
+
+
+@dataclasses.dataclass
+class _Entry:
+    sched: LevelSchedule
+    dev: Optional[DeviceSchedule] = None
+
+
+class ScheduleCache:
+    """LRU over packed schedules, keyed by batch topology fingerprint.
+
+    ``enabled=None`` (default) reads ``REPRO_SCHED_CACHE`` at
+    construction; ``False`` forces every lookup to cold-pack (stats
+    still count misses, so instrumented code behaves identically).
+    """
+
+    def __init__(self, capacity: int = 128,
+                 enabled: Optional[bool] = None) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.enabled = (cache_enabled_default()
+                        if enabled is None else bool(enabled))
+        self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- lookup -----------------------------------------------------------
+    def get_or_pack(self, graphs: Sequence[InputGraph],
+                    pads: Optional[Pads] = None) -> LevelSchedule:
+        """The schedule for ``graphs`` under ``pads`` — cached when the
+        batch topology (and pads) have been packed before."""
+        return self._lookup(graphs, pads).sched
+
+    def get_or_pack_device(self, graphs: Sequence[InputGraph],
+                           pads: Optional[Pads] = None
+                           ) -> Tuple[LevelSchedule, DeviceSchedule]:
+        """Like :meth:`get_or_pack` but also returns (and caches) the
+        device-resident schedule — a hit skips ``pack_batch`` AND the
+        host→device transfer."""
+        e = self._lookup(graphs, pads)
+        if e.dev is None:
+            e.dev = e.sched.to_device()
+        return e.sched, e.dev
+
+    def _lookup(self, graphs: Sequence[InputGraph],
+                pads: Optional[Pads]) -> _Entry:
+        p = tuple(pads) if pads is not None else (None, None, None, None)
+        if not self.enabled:
+            self.misses += 1
+            return _Entry(sched=pack_batch(graphs, *p))
+        key = batch_fingerprint(graphs, p)
+        e = self._entries.get(key)
+        if e is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return e
+        self.misses += 1
+        e = _Entry(sched=pack_batch(graphs, *p))
+        self._entries[key] = e
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return e
+
+    # -- accounting -------------------------------------------------------
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self),
+                "hit_rate": self.hit_rate}

@@ -1,0 +1,72 @@
+"""Canonical topology fingerprints (stage 1 of the schedule pipeline).
+
+``pack_batch`` is a pure function of (topologies, pad dims): two
+minibatches whose graphs have identical children lists, external-row
+maps and arities pack to byte-identical :class:`LevelSchedule`\\ s.  Real
+corpora repeat topologies constantly — every 7-token sentence is the
+same chain, balanced trees recur at each power of two — so a content
+hash of the topology is the natural cache key for skipping ``pack_batch``
+(and the host→device transfer of its output) entirely.
+
+The fingerprint covers exactly what ``pack_batch`` reads:
+
+  * the per-vertex children lists (ragged ints, length-prefixed so
+    ``[[1],[2]]`` and ``[[1,2],[]]`` cannot collide),
+  * the ``ext_row`` map (which external row each vertex pulls),
+
+and the batch-level key additionally covers the graph ORDER (packing is
+order-sensitive: slot assignment walks graphs in sequence) and the four
+``pad_*`` dims (a tight pack and a bucketed pack of the same graphs are
+different schedules).
+
+Hashes are 16-byte BLAKE2b digests; per-graph digests are memoized on
+the ``InputGraph`` instance (topologies are immutable once packed).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.structure import InputGraph
+
+#: Cached-digest attribute stashed on InputGraph instances.
+_FP_ATTR = "_topology_fp"
+
+
+def graph_fingerprint(g: InputGraph) -> bytes:
+    """16-byte canonical digest of one graph's topology ``G``."""
+    cached = getattr(g, _FP_ATTR, None)
+    if cached is not None:
+        return cached
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.num_nodes).tobytes())
+    lens = np.asarray([len(c) for c in g.children], np.int64)
+    h.update(lens.tobytes())
+    flat = np.asarray([c for ch in g.children for c in ch], np.int64)
+    h.update(flat.tobytes())
+    h.update(np.asarray(g.ext_row, np.int64).tobytes())
+    fp = h.digest()
+    try:
+        setattr(g, _FP_ATTR, fp)
+    except AttributeError:      # exotic graph types without a __dict__
+        pass
+    return fp
+
+
+def batch_fingerprint(graphs: Sequence[InputGraph],
+                      pads: Optional[Tuple[Optional[int], Optional[int],
+                                           Optional[int], Optional[int]]]
+                      = None) -> bytes:
+    """16-byte key for one (ordered) minibatch of graphs + pad dims —
+    the :class:`~repro.pipeline.cache.ScheduleCache` key."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(len(graphs)).tobytes())
+    for g in graphs:
+        h.update(graph_fingerprint(g))
+    pads = tuple(pads) if pads is not None else (None, None, None, None)
+    h.update(np.asarray([-1 if p is None else int(p) for p in pads],
+                        np.int64).tobytes())
+    return h.digest()

@@ -1,0 +1,56 @@
+"""Async packing (stage 4 of the schedule pipeline).
+
+Even a cache-hit lookup does host work (fingerprinting, external-input
+packing, the occasional cold ``pack_batch``), and the device should
+never wait on the host.  :class:`AsyncPacker` runs the whole
+fingerprint → cache → bucket → pack → device-put chain on a background
+thread with a bounded queue of ready batches — the same prefetch
+discipline as ``data/loader.py`` (it IS ``BackgroundPrefetcher``
+underneath), applied to schedule compilation.
+
+Ordering is preserved (single producer, FIFO queue); exceptions raised
+while packing surface on the consumer thread at the batch where they
+occurred; ``close()`` stops the producer and drains the queue.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Iterator
+
+from repro.data.loader import BackgroundPrefetcher
+
+
+class AsyncPacker:
+    """Background-thread map of ``pack_fn`` over ``source`` with a
+    bounded queue (``depth`` batches deep) — generic enough to pack
+    schedules (``SchedulePipeline.prefetch``) or to stage plain token
+    batches onto the device (``examples/train_lm.py``)."""
+
+    def __init__(self, source: Iterable[Any],
+                 pack_fn: Callable[[Any], Any], *, depth: int = 2):
+        self._source: Iterator[Any] = iter(source)
+        self._pack_fn = pack_fn
+        self.packed = 0                   # batches produced so far
+        self._bg = BackgroundPrefetcher(self._produce, depth=depth)
+
+    def _produce(self) -> Any:
+        item = next(self._source)         # StopIteration ends the stream
+        out = self._pack_fn(item)
+        self.packed += 1
+        return out
+
+    def __iter__(self) -> "AsyncPacker":
+        return self
+
+    def __next__(self) -> Any:
+        return next(self._bg)
+
+    def close(self) -> None:
+        self._bg.close()
+
+    def __enter__(self) -> "AsyncPacker":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

@@ -16,7 +16,7 @@ data.  Each engine tick:
 This mirrors the Var-LSTM experiment (§5.1): variable-length sequences
 batched without recompilation.
 
-Two engines live here:
+Three engines live here:
 
   - :class:`ServeEngine` — transformer-style decode over a KV-cache
     slot pool (prompt lengths bucketed to powers of two so admission
@@ -29,7 +29,15 @@ Two engines live here:
     scatter, buffer aliased in place); unfused it is the op-by-op
     gather → apply → scatter oracle.  Slot occupancy, per-slot
     positions and retirement are pure data — the compiled tick program
-    never changes (the Cavs property, now on the decode path).
+    never changes (the Cavs property, now on the decode path);
+  - :class:`StructureServeEngine` — request/response serving of WHOLE
+    structures (trees/DAGs, e.g. a sentiment service scoring parsed
+    sentences), routed through the schedule-compilation pipeline
+    (``repro.pipeline``): each dequeued batch is fingerprinted, looked
+    up in the schedule cache (repeated topologies skip ``pack_batch``
+    and the host→device copy), padded to bucket boundaries (one
+    compiled megastep program per bucket, not per shape), and executed
+    as one fused batched forward.
 """
 
 from __future__ import annotations
@@ -42,9 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheduler import resolve_fusion
+from repro.core.scheduler import execute, readout_roots, resolve_fusion
+from repro.core.structure import InputGraph
 from repro.core.vertex import VertexIO
 from repro.kernels import ops as kops
+from repro.pipeline import BucketPolicy, SchedulePipeline
 from repro.serve.kv_cache import CacheSlots
 
 Params = Any
@@ -331,6 +341,96 @@ class VertexServeEngine:
             if self.step() == 0:
                 break
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Whole-structure serving (the schedule pipeline on the request path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StructureRequest:
+    """One structure to score: the topology ``G`` plus its per-node
+    external inputs ``[num_nodes, X_raw]``.  The engine fills
+    ``root_state`` (``[S]``) — the batched readout of the root vertex."""
+
+    request_id: int
+    graph: InputGraph
+    inputs: np.ndarray
+    # -- filled by the engine ------------------------------------------
+    root_state: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class StructureServeEngine:
+    """Batch scoring of queued structures through the schedule pipeline.
+
+    Each :meth:`step` dequeues up to ``batch_size`` requests and runs
+    ONE batched fused forward over them.  The pipeline makes the host
+    path disappear under load: repeated topologies hit the schedule
+    cache (no ``pack_batch``, no host→device schedule copy), and the
+    bucket policy quantizes padded dims so the jitted forward compiles
+    once per bucket instead of once per shape —
+    ``engine.pipeline.stats()`` reports both effects (hit rate and
+    compiled-shape count).
+    """
+
+    def __init__(self, fn, params: Params, *, batch_size: int = 16,
+                 pipeline: Optional[SchedulePipeline] = None,
+                 fusion_mode: str = "auto"):
+        self.fn = fn
+        self.params = params
+        self.batch_size = batch_size
+        self.pipeline = pipeline if pipeline is not None else \
+            SchedulePipeline(fn.input_dim,
+                             bucket_policy=BucketPolicy(mode="pow2"))
+        self.queue: List[StructureRequest] = []
+        self.finished: List[StructureRequest] = []
+        self.batches = 0
+        self._run = jax.jit(functools.partial(_structure_batch, fn,
+                                              fusion_mode))
+
+    # -- ingress ------------------------------------------------------------
+    def submit(self, req: StructureRequest) -> None:
+        if req.graph.num_nodes < 1:
+            raise ValueError("empty structure")
+        if req.inputs.shape[0] != req.graph.num_nodes:
+            raise ValueError(
+                f"request {req.request_id}: {req.inputs.shape[0]} input "
+                f"rows for {req.graph.num_nodes} nodes")
+        self.queue.append(req)
+
+    # -- one engine batch ----------------------------------------------------
+    def step(self) -> int:
+        """Score one batch of queued requests.  Returns requests still
+        queued after the batch."""
+        if not self.queue:
+            return 0
+        reqs = self.queue[: self.batch_size]
+        del self.queue[: len(reqs)]
+        batch = self.pipeline.pack([r.graph for r in reqs],
+                                   [np.asarray(r.inputs, np.float32)
+                                    for r in reqs])
+        roots = np.asarray(self._run(self.params, batch.dev, batch.ext))
+        self.batches += 1
+        for k, req in enumerate(reqs):
+            req.root_state = roots[k].copy()
+            req.done = True
+            self.finished.append(req)
+        return len(self.queue)
+
+    def run(self, max_batches: int = 10_000) -> List[StructureRequest]:
+        """Drain the queue; returns finished requests."""
+        for _ in range(max_batches):
+            if self.step() == 0:
+                break
+        return self.finished
+
+
+def _structure_batch(fn, fusion_mode: str, params: Params, dev, ext):
+    """One batched forward over a packed request batch (jitted; the
+    bucket policy bounds how many distinct shapes ever get traced)."""
+    buf = execute(fn, params, dev, ext, fusion_mode=fusion_mode).buf
+    return readout_roots(buf, dev)
 
 
 def _vertex_tick(fn, spec, params: Params, buf: jax.Array,

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import types
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax
@@ -200,10 +201,32 @@ class Trainer:
         committed checkpoint — the 1000-node restart policy in
 
         miniature.
+
+        ``batches`` may come straight from the schedule pipeline
+        (``repro.pipeline``): batch values may be arbitrary pytrees
+        (e.g. a ``DeviceSchedule``), and a loader exposing ``close()``
+        (``PrefetchLoader`` / ``AsyncPacker``) has its background
+        producer shut down when the loop exits.
         """
         cfg = self.cfg
         steps = steps if steps is not None else cfg.total_steps
         logger = logger or MetricLogger()
+        try:
+            return self._fit(state, batches, steps, logger, fault_injector)
+        finally:
+            # Shut down background producers (PrefetchLoader/AsyncPacker)
+            # — but not plain generators, which every generator-`close()`
+            # would kill even though the caller may keep consuming it
+            # across fit() calls.
+            close = getattr(batches, "close", None)
+            if callable(close) and not isinstance(batches,
+                                                  types.GeneratorType):
+                close()
+
+    def _fit(self, state: TrainState, batches: Iterator[Batch], steps: int,
+             logger: MetricLogger, fault_injector) -> Tuple[TrainState,
+                                                            MetricLogger]:
+        cfg = self.cfg
         start = int(np.asarray(state.step))
 
         ctx = self.mesh if self.mesh is not None else _nullctx()
@@ -216,7 +239,8 @@ class Trainer:
             done = start
             while done < steps:
                 batch = next(batches)
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                batch = {k: jax.tree.map(jnp.asarray, v)
+                         for k, v in batch.items()}
                 try:
                     if fault_injector is not None:
                         fault_injector.tick(done)
@@ -256,8 +280,17 @@ class _nullctx:
 
 
 def _chain_first(first, rest):
+    # Explicit next() rather than `yield from`: when this wrapper is
+    # abandoned after the loop, its close() must NOT propagate into the
+    # caller-owned `rest` iterator (yield-from delegates GeneratorExit,
+    # which would close a generator the caller may reuse).
     yield first
-    yield from rest
+    while True:
+        try:
+            item = next(rest)
+        except StopIteration:
+            return
+        yield item
 
 
 def _flatten(tree, prefix=()):

@@ -99,6 +99,74 @@ def test_bucket_too_small_raises():
         pack_batch([chain(9)], pad_levels=4)
 
 
+# ---------------------------------------------------------------------------
+# Pad validation: errors name the offending graph; sentinel interaction
+# ---------------------------------------------------------------------------
+
+def test_pad_errors_name_offending_graph():
+    graphs = [chain(2), chain(9), chain(3)]
+    with pytest.raises(ValueError,
+                       match=r"pad_levels=4 < required T=9 \(graph 1 has "
+                             r"9 levels\)"):
+        pack_batch(graphs, pad_levels=4)
+    with pytest.raises(ValueError,
+                       match=r"pad_nodes=5 < required N=9 \(graph 1 has "
+                             r"9 nodes\)"):
+        pack_batch(graphs, pad_nodes=5)
+    mixed = [chain(4), balanced_binary_tree(4)]
+    with pytest.raises(ValueError,
+                       match=r"pad_arity=1 < required A=2 \(graph 1 has a "
+                             r"vertex of arity 2\)"):
+        pack_batch(mixed, pad_arity=1)
+
+
+def test_pad_width_error_names_widest_level_and_graph():
+    # level 0 holds all 4+2=6 leaves; graph 0 contributes 4 of them
+    graphs = [balanced_binary_tree(4), balanced_binary_tree(2)]
+    with pytest.raises(ValueError,
+                       match=r"pad_width=3 < required M=6 \(level 0 is "
+                             r"widest; graph 0 alone contributes 4 of its "
+                             r"6 slots\)"):
+        pack_batch(graphs, pad_width=3)
+
+
+def test_pad_nodes_and_width_sentinel_interaction():
+    """The buffer sentinel is T*M and the external sentinel is K*N —
+    BOTH move when pads move.  Every padding slot must point at the
+    padded sentinels, and pack_external must place sample rows at the
+    padded stride with the zero row at index K*N."""
+    graphs = [chain(3), chain(2)]
+    s = pack_batch(graphs, pad_levels=5, pad_width=4, pad_nodes=7)
+    assert (s.T, s.M, s.N) == (5, 4, 7)
+    assert s.sentinel_slot == 20 and s.num_ext_rows == 14
+    pad = s.node_mask == 0
+    assert np.all(s.child_ids[pad] == 20)
+    assert np.all(s.ext_ids[pad] == 14)
+    # real slots never reference either sentinel unmasked
+    real = s.node_mask > 0
+    assert np.all(s.ext_ids[real] < 14)
+    assert np.all(s.child_ids[s.child_mask > 0] < 20)
+    # sorted runs are over the PADDED [M*A] lanes and stay consistent
+    assert s.sort_perm.shape == (5, 4 * s.A)
+    np.testing.assert_array_equal(
+        np.sort(s.child_ids.reshape(5, -1), axis=1), s.sorted_child_ids)
+
+    xs = [np.ones((3, 2), np.float32), 2 * np.ones((2, 2), np.float32)]
+    ext = pack_external(xs, s, 2)
+    assert ext.shape == (15, 2)          # K*N + 1 rows at padded N
+    np.testing.assert_array_equal(ext[0:3], 1.0)
+    np.testing.assert_array_equal(ext[3:7], 0.0)    # sample 0 pad rows
+    np.testing.assert_array_equal(ext[7:9], 2.0)    # sample 1 at stride N=7
+    np.testing.assert_array_equal(ext[14], 0.0)     # sentinel row
+
+
+def test_pack_external_overflow_names_sample():
+    s = pack_batch([chain(2)], pad_nodes=2)
+    with pytest.raises(ValueError,
+                       match=r"sample 0 has 3 rows > pad_nodes=2"):
+        pack_external([np.zeros((3, 4), np.float32)], s, 4)
+
+
 def test_pack_external_rows():
     graphs = [chain(3), chain(2)]
     sched = pack_batch(graphs)

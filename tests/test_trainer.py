@@ -44,6 +44,23 @@ def test_loss_decreases():
     assert logger.history[-1]["loss"] < 0.05 * logger.history[0]["loss"]
 
 
+def test_caller_owned_generator_survives_staged_fits():
+    """fit() must not close a caller-owned generator: staged training
+    resumes consuming the SAME stream across fit() calls (guards both
+    the close() ownership check and _chain_first's non-delegating
+    abandonment)."""
+    init, loss_fn, batches = make_problem()
+    tr = Trainer(loss_fn, init, TrainConfig(lr=0.05, warmup_steps=5,
+                                            weight_decay=0.0,
+                                            total_steps=40, log_every=1))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    stream = batches()
+    logger = MetricLogger(log_fn=lambda *_: None)
+    state, logger = tr.fit(state, stream, steps=15, logger=logger)
+    state, logger = tr.fit(state, stream, steps=40, logger=logger)
+    assert int(np.asarray(state.step)) == 40
+
+
 def test_resume_is_deterministic(tmp_path):
     """run 40 steps straight  ≡  run 20, 'crash', restore, run 20."""
     init, loss_fn, batches = make_problem()
