@@ -16,6 +16,18 @@ cold (``pack_batch`` from scratch) vs on the fingerprint-cache hit path
 stream of random minibatches.  ``--assert-cache`` additionally enforces
 the CI cache-effectiveness gate: a second epoch over the same synthetic
 corpus must hit ≥90%.
+
+The ``composer/*`` rows measure pipeline-aware batch FORMATION (PR 5)
+on a skewed synthetic corpus (a few hot topologies + a long tail,
+shuffled arrival order — the real-corpus shape): measured cache hit
+rate, mean padded occupancy and compile count of FIFO slicing vs
+``BatchComposer`` composition over one epoch.  ``--assert-compose``
+enforces the CI gate: composed must strictly beat FIFO on hit rate AND
+occupancy with compile count no worse.  ``--persist-dir`` routes the
+composed leg through an on-disk schedule store; with ``--assert-warm``
+the run must be served entirely from the store (zero ``pack_batch``
+calls — the warm-restart acceptance check, run as the second of two CI
+invocations against the same directory).
 """
 
 from __future__ import annotations
@@ -32,8 +44,8 @@ from repro.configs.paper import get_paper_model
 from repro.core.scheduler import execute
 from repro.core.structure import (fit_bucket, pack_batch, pack_external,
                                   random_binary_tree)
-from repro.pipeline import (BucketPolicy, ScheduleCache, SchedulePipeline,
-                            ShapeCensus)
+from repro.pipeline import (BatchComposer, BucketPolicy, ScheduleCache,
+                            SchedulePipeline, ShapeCensus)
 
 
 def bench(col: Collector, leaves_list, bs: int = 16, hidden: int = 32):
@@ -150,12 +162,123 @@ def bench_pipeline(col: Collector, *, n_topologies: int = 24, bs: int = 16,
             "programs", f"{n_topologies} minibatches, pow2 buckets")
 
 
+def _skewed_corpus(n_samples: int, seed: int = 0):
+    """A corpus with real-traffic skew: a few HOT topologies carry most
+    of the mass, a long tail of rare shapes carries the rest, and
+    arrival order is shuffled — the case where FIFO slicing almost
+    never repeats a batch fingerprint but composition can."""
+    rng = np.random.default_rng(seed)
+    hot = [random_binary_tree(int(s), np.random.default_rng(100 + i))
+           for i, s in enumerate((6, 6, 10, 14, 22))]
+    corpus = []
+    for _ in range(n_samples):
+        if rng.random() < 0.75:           # hot mass, Zipf-ish within
+            corpus.append(hot[min(int(rng.zipf(1.6)) - 1, len(hot) - 1)])
+        else:                              # tail: fresh random shape
+            corpus.append(random_binary_tree(int(rng.integers(2, 28)), rng))
+    rng.shuffle(corpus)
+    return corpus
+
+
+def _epoch_through_pipeline(batches, pipe: SchedulePipeline):
+    """Run a batch plan (``(graphs, pads)`` pairs; ``pads="policy"``
+    for FIFO) through a pipeline; returns mean occupancy."""
+    occ = []
+    for graphs, pads in batches:
+        inputs = [np.zeros((g.num_nodes, 1), np.float32) for g in graphs]
+        pb = pipe.pack(graphs, inputs, pads=pads)
+        occ.append(pb.sched.occupancy)
+    return float(np.mean(occ))
+
+
+def bench_composer(col: Collector, *, n_samples: int = 256, bs: int = 16,
+                   assert_compose: bool = False,
+                   persist_dir: str = None, assert_warm: bool = False):
+    """``composer/*`` rows: FIFO vs composed batch formation on the
+    skewed corpus — measured hit rate, occupancy, compile count — plus
+    the optional persistent-store leg."""
+    corpus = _skewed_corpus(n_samples)
+    policy = BucketPolicy(mode="pow2")
+
+    fifo_plan = [(corpus[i: i + bs], "policy")
+                 for i in range(0, len(corpus), bs)]
+    pipe_fifo = SchedulePipeline(1, bucket_policy=policy,
+                                 cache=ScheduleCache(enabled=True,
+                                                     persist=False))
+    fifo_occ = _epoch_through_pipeline(fifo_plan, pipe_fifo)
+
+    # Equal compile budget: the composer may use at most as many
+    # distinct padded shapes as FIFO slicing produced — the hit-rate
+    # and occupancy wins below are NOT bought with extra compiles.
+    composer = BatchComposer(
+        bs, bucket_policy=policy,
+        shape_budget=pipe_fifo.stats()["compiled_shapes"])
+    composed, cstats = composer.compose(corpus)
+    pipe_comp = SchedulePipeline(
+        1, bucket_policy=policy,
+        cache=ScheduleCache(enabled=True,
+                            persist=persist_dir if persist_dir else False))
+    comp_occ = _epoch_through_pipeline([(b.graphs, b.pads)
+                                        for b in composed], pipe_comp)
+
+    f, c = pipe_fifo.stats(), pipe_comp.stats()
+    col.add("composer/fifo_hit_rate", f["hit_rate"], "frac",
+            f"{n_samples} samples bs={bs}, arrival order")
+    col.add("composer/composed_hit_rate", c["hit_rate"], "frac",
+            f"{cstats.num_groups} groups -> {cstats.group_batches} whole "
+            f"+ {cstats.leftover_batches} leftover batches")
+    col.add("composer/fifo_occupancy", fifo_occ, "frac",
+            f"mean padded T*M slot occupancy, pow2 buckets")
+    col.add("composer/composed_occupancy", comp_occ, "frac",
+            f"greedy depth/size fill")
+    col.add("composer/fifo_compile_count", f["compiled_shapes"],
+            "programs", f"{len(fifo_plan)} batches")
+    col.add("composer/composed_compile_count", c["compiled_shapes"],
+            "programs", f"{cstats.num_batches} batches")
+    col.add("composer/composed_packs", c["packs"], "packs",
+            "pack_batch executions (disk tier may serve the rest)")
+    if persist_dir:
+        col.add("composer/persist_disk_hits", c["disk_hits"], "loads",
+                f"store={persist_dir}")
+    if assert_compose:
+        if not (c["hit_rate"] > f["hit_rate"]):
+            raise AssertionError(
+                f"composer gate: composed hit rate {c['hit_rate']:.2f} "
+                f"must beat FIFO {f['hit_rate']:.2f}")
+        if not (comp_occ > fifo_occ):
+            raise AssertionError(
+                f"composer gate: composed occupancy {comp_occ:.2f} must "
+                f"beat FIFO {fifo_occ:.2f}")
+        if c["compiled_shapes"] > f["compiled_shapes"]:
+            raise AssertionError(
+                f"composer gate: composed compile count "
+                f"{c['compiled_shapes']} worse than FIFO "
+                f"{f['compiled_shapes']}")
+    if assert_warm:
+        if not persist_dir:
+            raise AssertionError("--assert-warm requires --persist-dir")
+        if c["packs"] != 0 or c["disk_hits"] < 1:
+            raise AssertionError(
+                f"warm-restart gate: expected zero pack_batch calls and "
+                f">=1 disk hit, got packs={c['packs']} "
+                f"disk_hits={c['disk_hits']}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--assert-cache", action="store_true",
                     help="fail unless the second epoch over the same "
                          "corpus hits >=90%% in the schedule cache")
+    ap.add_argument("--assert-compose", action="store_true",
+                    help="fail unless composed batching beats FIFO on "
+                         "hit rate and occupancy (compile count no worse)")
+    ap.add_argument("--persist-dir", default=None,
+                    help="route the composed leg through an on-disk "
+                         "schedule store at this directory")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="with --persist-dir: fail unless the run is "
+                         "served entirely from the store (zero packs)")
     ap.add_argument("--pipeline-only", action="store_true",
                     help="skip the Fig. 9 compute/retrace sweeps and run "
                          "only the host-side pipeline rows (the CI gate)")
@@ -167,6 +290,11 @@ def main(argv=None):
     bench_pipeline(col, **({"n_topologies": 48, "bs": 32} if args.full
                            else {}),
                    assert_cache=args.assert_cache)
+    bench_composer(col, **({"n_samples": 512, "bs": 32} if args.full
+                           else {}),
+                   assert_compose=args.assert_compose,
+                   persist_dir=args.persist_dir,
+                   assert_warm=args.assert_warm)
     return col
 
 

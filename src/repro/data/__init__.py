@@ -4,8 +4,10 @@ from repro.data.synthetic import (lm_batches, synthetic_corpus,
                                   token_batch_specs)
 from repro.data.trees import (TreeDataset, sst_like_dataset,
                               tree_fc_dataset, var_len_chains)
-from repro.data.loader import PrefetchLoader, ShardedSource
+from repro.data.loader import (ComposedBatchSource, PrefetchLoader,
+                               ShardedSource)
 
 __all__ = ["lm_batches", "synthetic_corpus", "token_batch_specs",
            "TreeDataset", "sst_like_dataset", "tree_fc_dataset",
-           "var_len_chains", "PrefetchLoader", "ShardedSource"]
+           "var_len_chains", "ComposedBatchSource", "PrefetchLoader",
+           "ShardedSource"]

@@ -81,6 +81,66 @@ class BackgroundPrefetcher:
         except queue.Empty:
             pass
         self._thread.join(timeout=2.0)
+        if self._terminal is None:
+            # Latch a LOUD end state: without it, next() after close()
+            # would block forever on a queue no producer feeds (e.g. a
+            # second fit() over a loader the first fit() auto-closed).
+            self._terminal = RuntimeError(
+                "BackgroundPrefetcher is closed — create a new "
+                "loader/packer instead of reusing a closed one")
+
+
+class ComposedBatchSource:
+    """Epoch-cycled, composition-aware batch source over a fixed corpus.
+
+    The data-layer entry point for pipeline-aware batch formation: the
+    corpus is composed ONCE by a :class:`repro.pipeline.BatchComposer`
+    (same-fingerprint groups first, greedy depth/size fill for the
+    rest; composition is deterministic, so re-composing per epoch would
+    reproduce the identical plan) and the composed batches are replayed
+    every epoch as ``(graphs, inputs, aux, pads)`` items ready for
+    ``SchedulePipeline.pack``/``.prefetch`` — from epoch 2 on, every
+    batch topology is a schedule-cache hit.  The corpus is captured at
+    construction and treated as immutable (build a new source for new
+    data), and the object is a one-shot iterator: once ``epochs=N``
+    epochs are exhausted it stays exhausted.
+
+    ``aux`` riders (e.g. ``{"labels": [...]}`` with one value per
+    sample) are permuted in lockstep; every yielded item additionally
+    carries ``sample_ids`` in its aux dict for realignment.  The last
+    epoch's :class:`repro.pipeline.CompositionStats` is exposed as
+    :attr:`stats`.
+    """
+
+    def __init__(self, graphs, inputs=None, aux=None, *, composer,
+                 epochs: Optional[int] = None):
+        self.graphs = graphs
+        self.inputs = inputs
+        self.aux = aux
+        self.composer = composer
+        self.epochs = epochs              # None = cycle forever
+        self.stats = None                 # CompositionStats of the epoch
+        self._batches = None              # composed once, replayed
+        self._gen = self._generate()
+
+    def _generate(self):
+        epoch = 0
+        while self.epochs is None or epoch < self.epochs:
+            if self._batches is None:
+                # composition is deterministic over a fixed corpus, so
+                # compose once and replay — every later epoch would
+                # reproduce the identical plan anyway
+                self._batches, self.stats = self.composer.compose(
+                    self.graphs, self.inputs, self.aux)
+            for b in self._batches:
+                yield b.as_item()
+            epoch += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return next(self._gen)
 
 
 class ShardedSource:

@@ -7,15 +7,29 @@ so its output is memoizable: an LRU keyed by the batch topology
 fingerprint returns the previously packed :class:`LevelSchedule`
 (and its device-resident twin, skipping the host→device transfer too).
 
+The cache has two tiers.  The in-memory LRU is process-local and
+bounded (default 128 entries ≈ a few MB for typical schedules).  Below
+it sits an optional on-disk store (:class:`~repro.pipeline.persist.
+SchedulePersist`, enabled by ``REPRO_SCHED_PERSIST=<dir>`` or an
+explicit ``persist=`` argument): a memory miss consults the store
+before cold-packing, and cold packs are written back — so serving
+restarts and repeat training runs start warm.  ``stats()`` separates
+the tiers: ``hits`` (memory), ``disk_hits`` (store), and ``packs``
+(actual ``pack_batch`` executions — a fully warm restart shows
+``packs == 0``).
+
+Hit accounting counts LOGICAL lookups: ``get_or_pack`` immediately
+followed by ``get_or_pack_device`` on the same key is one lookup whose
+device twin is attached after the fact, not two hits.
+
 Soundness: cached schedules are returned BY REFERENCE.  That is safe
 because every consumer treats the schedule as read-only data (it is the
 paper's per-sample input ``G``, "read through I/O"); nothing in the
 scheduler, the kernels or the readouts writes to it.
 
-The cache is process-local and bounded (default 128 entries ≈ a few MB
-for typical schedules); eviction is least-recently-used.  Set the env
-var ``REPRO_SCHED_CACHE=0`` to disable caching globally (every lookup
-cold-packs — the ablation/debug setting, exercised as a CI leg).
+Set ``REPRO_SCHED_CACHE=0`` to disable caching globally (every lookup
+cold-packs and the disk tier is bypassed — the ablation/debug setting,
+exercised as a CI leg).
 """
 
 from __future__ import annotations
@@ -23,11 +37,13 @@ from __future__ import annotations
 import dataclasses
 import os
 from collections import OrderedDict
-from typing import Dict, Optional, Sequence, Tuple
+from pathlib import Path
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
                                   pack_batch)
 from repro.pipeline.fingerprint import batch_fingerprint
+from repro.pipeline.persist import SchedulePersist, persist_dir_default
 
 Pads = Tuple[Optional[int], Optional[int], Optional[int], Optional[int]]
 
@@ -44,23 +60,54 @@ class _Entry:
 
 
 class ScheduleCache:
-    """LRU over packed schedules, keyed by batch topology fingerprint.
+    """Two-tier (memory LRU + optional disk) cache over packed
+    schedules, keyed by batch topology fingerprint.
 
     ``enabled=None`` (default) reads ``REPRO_SCHED_CACHE`` at
     construction; ``False`` forces every lookup to cold-pack (stats
     still count misses, so instrumented code behaves identically).
+
+    ``persist=None`` (default) reads ``REPRO_SCHED_PERSIST`` at
+    construction; pass a directory path or a :class:`SchedulePersist`
+    to pin a store explicitly, or ``False`` to force the disk tier off
+    regardless of the environment.
     """
 
     def __init__(self, capacity: int = 128,
-                 enabled: Optional[bool] = None) -> None:
+                 enabled: Optional[bool] = None,
+                 persist: Union[SchedulePersist, str, Path, bool,
+                                None] = None) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.enabled = (cache_enabled_default()
                         if enabled is None else bool(enabled))
+        if persist is None or persist is True:
+            # True = "enable from the environment" (same as the default)
+            pdir = persist_dir_default()
+            try:
+                self.persist = SchedulePersist(pdir) if pdir else None
+            except OSError:
+                # An unusable REPRO_SCHED_PERSIST dir must not take the
+                # process down — the disk tier is an optimization.  An
+                # EXPLICIT persist= argument still raises (the caller
+                # asked for that store specifically).
+                self.persist = None
+        elif persist is False:
+            self.persist = None
+        elif isinstance(persist, SchedulePersist):
+            self.persist = persist
+        else:
+            self.persist = SchedulePersist(persist)
         self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
+        # The key of an immediately preceding get_or_pack whose entry a
+        # get_or_pack_device may still be completing (device-twin
+        # attach) — that pair is ONE logical lookup, counted once.
+        self._pending_attach: Optional[bytes] = None
+        self.hits = 0           # memory-tier hits
+        self.disk_hits = 0      # memory misses served from the store
+        self.misses = 0         # memory-tier misses (disk_hits + packs)
+        self.packs = 0          # actual pack_batch executions
         self.evictions = 0
 
     # -- lookup -----------------------------------------------------------
@@ -68,38 +115,67 @@ class ScheduleCache:
                     pads: Optional[Pads] = None) -> LevelSchedule:
         """The schedule for ``graphs`` under ``pads`` — cached when the
         batch topology (and pads) have been packed before."""
-        return self._lookup(graphs, pads).sched
+        e, key = self._lookup(graphs, pads)
+        self._pending_attach = key
+        return e.sched
 
     def get_or_pack_device(self, graphs: Sequence[InputGraph],
                            pads: Optional[Pads] = None
                            ) -> Tuple[LevelSchedule, DeviceSchedule]:
         """Like :meth:`get_or_pack` but also returns (and caches) the
         device-resident schedule — a hit skips ``pack_batch`` AND the
-        host→device transfer."""
-        e = self._lookup(graphs, pads)
+        host→device transfer.  Called right after :meth:`get_or_pack`
+        on the same key, it completes that same logical lookup (attach
+        the device twin) rather than counting a second hit."""
+        pending = self._pending_attach
+        self._pending_attach = None
+        if (self.enabled and pending is not None
+                and pending == self._key(graphs, pads)):
+            e = self._entries.get(pending)
+            if e is not None:               # attach, don't recount
+                self._entries.move_to_end(pending)
+                if e.dev is None:
+                    e.dev = e.sched.to_device()
+                return e.sched, e.dev
+        e, _ = self._lookup(graphs, pads)
         if e.dev is None:
             e.dev = e.sched.to_device()
         return e.sched, e.dev
 
+    def _key(self, graphs: Sequence[InputGraph],
+             pads: Optional[Pads]) -> bytes:
+        p = tuple(pads) if pads is not None else (None, None, None, None)
+        return batch_fingerprint(graphs, p)
+
     def _lookup(self, graphs: Sequence[InputGraph],
-                pads: Optional[Pads]) -> _Entry:
+                pads: Optional[Pads]) -> Tuple[_Entry, Optional[bytes]]:
+        self._pending_attach = None
         p = tuple(pads) if pads is not None else (None, None, None, None)
         if not self.enabled:
             self.misses += 1
-            return _Entry(sched=pack_batch(graphs, *p))
+            self.packs += 1
+            return _Entry(sched=pack_batch(graphs, *p)), None
         key = batch_fingerprint(graphs, p)
         e = self._entries.get(key)
         if e is not None:
             self.hits += 1
             self._entries.move_to_end(key)
-            return e
+            return e, key
         self.misses += 1
-        e = _Entry(sched=pack_batch(graphs, *p))
+        sched = self.persist.load(key) if self.persist is not None else None
+        if sched is not None:
+            self.disk_hits += 1
+        else:
+            sched = pack_batch(graphs, *p)
+            self.packs += 1
+            if self.persist is not None:
+                self.persist.store(key, sched)
+        e = _Entry(sched=sched)
         self._entries[key] = e
         if len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
-        return e
+        return e, key
 
     # -- accounting -------------------------------------------------------
     @property
@@ -111,9 +187,20 @@ class ScheduleCache:
         return len(self._entries)
 
     def reset_stats(self) -> None:
+        """Zero all counters, INCLUDING the disk tier's (note: a
+        ``SchedulePersist`` shared between caches loses the other
+        caches' disk accounting too — give each cache its own store
+        instance when per-cache disk stats matter)."""
         self.hits = self.misses = self.evictions = 0
+        self.disk_hits = self.packs = 0
+        if self.persist is not None:
+            self.persist.reset()
 
     def stats(self) -> Dict[str, float]:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "entries": len(self),
-                "hit_rate": self.hit_rate}
+        s = {"hits": self.hits, "misses": self.misses,
+             "evictions": self.evictions, "entries": len(self),
+             "hit_rate": self.hit_rate,
+             "disk_hits": self.disk_hits, "packs": self.packs}
+        if self.persist is not None:
+            s.update(self.persist.stats())
+        return s

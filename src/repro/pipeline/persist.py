@@ -1,0 +1,189 @@
+"""On-disk persistence of packed schedules (the cache's disk tier).
+
+The in-memory :class:`~repro.pipeline.cache.ScheduleCache` dies with
+the process, so a serving restart or a repeat training run re-packs
+every topology from scratch.  ``pack_batch`` is a pure function of
+(topologies, pads), so its output can outlive the process: this module
+serializes packed :class:`LevelSchedule`\\ s — every field, including
+the sorted-run arrays the fused backward consumes — to one file per
+batch fingerprint under a store directory.  Point
+``REPRO_SCHED_PERSIST=<dir>`` at a store and every ``ScheduleCache``
+falls back memory → disk → cold pack, writing back on cold packs; a
+warm restart then executes ZERO ``pack_batch`` calls (asserted via
+pipeline stats in CI).
+
+Durability discipline:
+
+  * writes are atomic (temp file + ``os.replace``), so a crash
+    mid-write never leaves a half-entry under the real key;
+  * every file carries a versioned header (magic + schema version +
+    payload length + BLAKE2b digest of the payload); truncation,
+    corruption and version skew are each detected on load and treated
+    as quiet MISSES (counted in :attr:`SchedulePersist.stats`), never
+    as errors — a poisoned store can only cost re-packing.
+
+Unlike the in-memory LRU above it, the store itself is UNBOUNDED: one
+file per unique (topologies, pads) key, nothing evicted.  Entries are
+small (tens of KB) and safe to delete at any time — `rm` the directory
+(or any subset of files) to reclaim space; every removal just becomes
+a cold pack.  Tail-heavy corpora on long-lived hosts should prune or
+cap the directory externally until a built-in GC lands (see ROADMAP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.structure import LevelSchedule
+
+#: File layout: MAGIC | uint64 version | uint64 payload_len |
+#: 16-byte BLAKE2b(payload) | payload (an .npz of the schedule fields).
+MAGIC = b"REPROSCHED\x00"
+SCHEMA_VERSION = 1
+_HEADER_LEN = len(MAGIC) + 8 + 8 + 16
+
+#: Every LevelSchedule field serializes (all are arrays; optional ones
+#: — the sorted-run trio on hand-built schedules — record presence
+#: per-field in the payload).  Derived from the dataclass so a future
+#: field can never be silently dropped on round-trip.
+_FIELDS = tuple(f.name for f in dataclasses.fields(LevelSchedule))
+
+
+def persist_dir_default() -> Optional[str]:
+    """The ``REPRO_SCHED_PERSIST`` env gate: a store directory, or
+    ``None``/empty for no disk tier."""
+    return os.environ.get("REPRO_SCHED_PERSIST") or None
+
+
+def _encode(sched: LevelSchedule) -> bytes:
+    buf = io.BytesIO()
+    arrays = {f: getattr(sched, f) for f in _FIELDS
+              if getattr(sched, f) is not None}
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    head = (MAGIC
+            + np.uint64(SCHEMA_VERSION).tobytes()
+            + np.uint64(len(payload)).tobytes()
+            + hashlib.blake2b(payload, digest_size=16).digest())
+    return head + payload
+
+
+class StoreMiss(Exception):
+    """Internal: the entry is unusable (absent, corrupt, or stale)."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+def _decode(blob: bytes) -> LevelSchedule:
+    if len(blob) < _HEADER_LEN:
+        raise StoreMiss("corrupt")          # truncated inside the header
+    off = len(MAGIC)
+    if blob[:off] != MAGIC:
+        raise StoreMiss("corrupt")
+    version = int(np.frombuffer(blob[off: off + 8], np.uint64)[0])
+    if version != SCHEMA_VERSION:
+        raise StoreMiss("version")
+    plen = int(np.frombuffer(blob[off + 8: off + 16], np.uint64)[0])
+    digest = blob[off + 16: off + 32]
+    payload = blob[_HEADER_LEN:]
+    if len(payload) != plen:
+        raise StoreMiss("corrupt")          # truncated / trailing junk
+    if hashlib.blake2b(payload, digest_size=16).digest() != digest:
+        raise StoreMiss("corrupt")
+    try:
+        with np.load(io.BytesIO(payload)) as z:
+            fields = {f: np.asarray(z[f]) for f in _FIELDS if f in z.files}
+        return LevelSchedule(**fields)
+    except Exception:                       # noqa: BLE001 — any bad payload
+        raise StoreMiss("corrupt")
+
+
+class SchedulePersist:
+    """A directory of packed schedules keyed by batch fingerprint.
+
+    One file per key (``<fingerprint-hex>.sched``).  All failure modes
+    on :meth:`load` — missing file, truncated/corrupt bytes, schema
+    version mismatch — return ``None`` and bump the matching counter;
+    :meth:`store` failures (full disk, read-only store) are likewise
+    swallowed and counted, because persistence is an optimization, not
+    a correctness dependency.
+    """
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero the counters (owned here so callers — e.g.
+        ``ScheduleCache.reset_stats`` — never have to enumerate them)."""
+        self.loads = 0          # successful disk reads
+        self.load_misses = 0    # absent entries
+        self.corrupt = 0        # truncated/garbled entries skipped
+        self.stale = 0          # version-header mismatches skipped
+        self.stores = 0         # successful writes
+        self.store_errors = 0   # swallowed write failures
+
+    def path_for(self, key: bytes) -> Path:
+        return self.root / f"{key.hex()}.sched"
+
+    def load(self, key: bytes) -> Optional[LevelSchedule]:
+        path = self.path_for(key)
+        try:
+            blob = path.read_bytes()
+        except OSError:
+            self.load_misses += 1
+            return None
+        try:
+            sched = _decode(blob)
+        except StoreMiss as m:
+            if m.reason == "version":
+                self.stale += 1
+            else:
+                self.corrupt += 1
+            return None
+        self.loads += 1
+        return sched
+
+    def store(self, key: bytes, sched: LevelSchedule) -> bool:
+        blob = _encode(sched)
+        path = self.path_for(key)
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)       # atomic publish
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except OSError:
+            self.store_errors += 1
+            return False
+        self.stores += 1
+        return True
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.sched"))
+
+    def __contains__(self, key: bytes) -> bool:
+        return self.path_for(key).exists()
+
+    def stats(self) -> Dict[str, int]:
+        return {"disk_loads": self.loads, "disk_load_misses": self.load_misses,
+                "disk_corrupt": self.corrupt, "disk_stale": self.stale,
+                "disk_stores": self.stores,
+                "disk_store_errors": self.store_errors}

@@ -19,6 +19,15 @@ that wins that cost back:
   4. **prefetch** (``prefetch.py``) — the whole chain runs on a
      background thread, overlapped with device compute.
 
+Two stages bracket the chain.  In front, **compose** (``composer.py``)
+reorders a corpus into batches that *manufacture* cache hits (group
+same-fingerprint samples) and maximize bucket occupancy (greedy
+depth/size fill) — a lossless permutation carrying aux riders and
+``sample_ids`` for realignment.  Behind, **persist** (``persist.py``)
+backs the cache with an on-disk store (``REPRO_SCHED_PERSIST=<dir>``):
+memory miss → disk load → cold pack with write-back, so restarts and
+repeat runs skip ``pack_batch`` entirely.
+
 The packed schedule also carries the precomputed sorted runs
 (``sort_perm`` / ``sorted_child_ids`` / ``run_head``) that the fused
 backward consumes — so a training step downstream of this pipeline
@@ -38,6 +47,7 @@ from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
                                   pack_external)
 from repro.pipeline.buckets import BucketPolicy, PadDims, ShapeCensus
 from repro.pipeline.cache import ScheduleCache
+from repro.pipeline.composer import BatchComposer, CompositionStats
 from repro.pipeline.prefetch import AsyncPacker
 
 
@@ -80,23 +90,55 @@ class SchedulePipeline:
 
     def pack(self, graphs: Sequence[InputGraph],
              inputs: Sequence[np.ndarray],
-             aux: Optional[Dict[str, Any]] = None) -> PackedBatch:
+             aux: Optional[Dict[str, Any]] = None,
+             pads: Union[PadDims, None, str] = "policy") -> PackedBatch:
         """Fingerprint → cache lookup (or cold pack) → external packing
-        → device residency, for one minibatch."""
-        pads = self.pads_for(graphs)
+        → device residency, for one minibatch.
+
+        ``pads`` defaults to this pipeline's bucket policy; pass an
+        explicit :class:`PadDims` to honour a composer's (possibly
+        consolidated) plan, or ``None`` to force a tight pack."""
+        if isinstance(pads, str):
+            if pads != "policy":
+                raise ValueError(
+                    f"pads must be a PadDims, None (tight) or 'policy', "
+                    f"got {pads!r}")
+            pads = self.pads_for(graphs)
         sched, dev = self.cache.get_or_pack_device(graphs, pads)
         self.census.record(sched)
         ext = jnp.asarray(pack_external(inputs, sched, self.ext_dim))
         return PackedBatch(sched=sched, dev=dev, ext=ext,
                            aux=dict(aux or {}))
 
+    # -- batch composition (pipeline-aware batch formation) ---------------
+    def composer(self, batch_size: int) -> BatchComposer:
+        """A :class:`BatchComposer` sharing this pipeline's bucket
+        policy — composed batches are scored for hits/occupancy under
+        exactly the pads :meth:`pack` will use."""
+        return BatchComposer(batch_size, bucket_policy=self.bucket_policy)
+
+    def compose(self, graphs: Sequence[InputGraph],
+                inputs: Optional[Sequence[np.ndarray]] = None,
+                aux: Optional[Dict[str, Any]] = None, *,
+                batch_size: int,
+                ) -> Tuple[list, CompositionStats]:
+        """Compose one epoch over a corpus: group same-fingerprint
+        samples into whole batches (manufactured cache hits) and fill
+        the remainder greedily by depth/size (occupancy).  Returns
+        ``(composed_batches, CompositionStats)``; feed the batches to
+        :meth:`pack`/:meth:`prefetch` via ``ComposedBatch.as_item()``
+        — ``sample_ids`` rides in ``aux`` for realignment."""
+        return self.composer(batch_size).compose(graphs, inputs, aux)
+
     # -- a stream of batches ---------------------------------------------
     def prefetch(self, source: Iterable[Union[Tuple, "PackedBatch"]],
                  *, depth: int = 2) -> AsyncPacker:
-        """Async stage over a stream of ``(graphs, inputs)`` or
-        ``(graphs, inputs, aux)`` tuples: packing (and its cache
-        bookkeeping) runs on a background thread, ``depth`` batches
-        ahead of the consumer."""
+        """Async stage over a stream of ``(graphs, inputs)``,
+        ``(graphs, inputs, aux)`` or ``(graphs, inputs, aux, pads)``
+        tuples (the 4-tuple is what composed sources yield — dropping
+        the ``pads`` element would lose the composer's consolidated
+        bucket plan): packing (and its cache bookkeeping) runs on a
+        background thread, ``depth`` batches ahead of the consumer."""
 
         def pack_one(item):
             if isinstance(item, PackedBatch):

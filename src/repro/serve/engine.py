@@ -54,7 +54,8 @@ from repro.core.scheduler import execute, readout_roots, resolve_fusion
 from repro.core.structure import InputGraph
 from repro.core.vertex import VertexIO
 from repro.kernels import ops as kops
-from repro.pipeline import BucketPolicy, SchedulePipeline
+from repro.pipeline import (BucketPolicy, SchedulePipeline,
+                            graph_fingerprint)
 from repro.serve.kv_cache import CacheSlots
 
 Params = Any
@@ -372,18 +373,28 @@ class StructureServeEngine:
     once per bucket instead of once per shape —
     ``engine.pipeline.stats()`` reports both effects (hit rate and
     compiled-shape count).
+
+    ``compose=True`` (default) additionally COMPOSES each dequeued
+    batch instead of slicing the queue FIFO: the batch is anchored on
+    the oldest pending request (no starvation) and filled with every
+    queued request sharing its topology fingerprint first — the batch
+    most likely to be a schedule-cache hit — then topped up FIFO.
+    Responses are per-request objects, so reordering is invisible to
+    callers beyond latency.
     """
 
     def __init__(self, fn, params: Params, *, batch_size: int = 16,
                  pipeline: Optional[SchedulePipeline] = None,
-                 fusion_mode: str = "auto"):
+                 fusion_mode: str = "auto", compose: bool = True):
         self.fn = fn
         self.params = params
         self.batch_size = batch_size
+        self.compose = compose
         self.pipeline = pipeline if pipeline is not None else \
             SchedulePipeline(fn.input_dim,
                              bucket_policy=BucketPolicy(mode="pow2"))
         self.queue: List[StructureRequest] = []
+        self._queued_ids: set = set()     # id(req) of pending requests
         self.finished: List[StructureRequest] = []
         self.batches = 0
         self._run = jax.jit(functools.partial(_structure_batch, fn,
@@ -397,6 +408,12 @@ class StructureServeEngine:
             raise ValueError(
                 f"request {req.request_id}: {req.inputs.shape[0]} input "
                 f"rows for {req.graph.num_nodes} nodes")
+        if id(req) in self._queued_ids:
+            # the engine fills req in place and the flush path tracks
+            # queue entries by identity — one object, one pending score
+            raise ValueError(
+                f"request {req.request_id} is already queued")
+        self._queued_ids.add(id(req))
         self.queue.append(req)
 
     # -- one engine batch ----------------------------------------------------
@@ -405,8 +422,12 @@ class StructureServeEngine:
         queued after the batch."""
         if not self.queue:
             return 0
-        reqs = self.queue[: self.batch_size]
-        del self.queue[: len(reqs)]
+        reqs = (self._compose_flush() if self.compose
+                else self.queue[: self.batch_size])
+        taken = set(id(r) for r in reqs)   # by identity: requests hold
+        self.queue = [r for r in self.queue  # ndarrays, so == is unusable
+                      if id(r) not in taken]
+        self._queued_ids -= taken
         batch = self.pipeline.pack([r.graph for r in reqs],
                                    [np.asarray(r.inputs, np.float32)
                                     for r in reqs])
@@ -424,6 +445,27 @@ class StructureServeEngine:
             if self.step() == 0:
                 break
         return self.finished
+
+    # -- internals ----------------------------------------------------------
+    def _compose_flush(self) -> List[StructureRequest]:
+        """The batch to flush: anchored on the OLDEST pending request
+        (bounded latency), filled with same-fingerprint peers from
+        anywhere in the queue (the composed cache-hit batch), topped up
+        FIFO when the group runs short.  Same-fingerprint requests are
+        kept in queue order, so a recurring group composes the same
+        ordered digest sequence every flush — a schedule-cache hit."""
+        anchor_fp = graph_fingerprint(self.queue[0].graph)
+        batch = [r for r in self.queue
+                 if graph_fingerprint(r.graph) == anchor_fp]
+        batch = batch[: self.batch_size]
+        if len(batch) < self.batch_size:
+            chosen = set(id(r) for r in batch)
+            for r in self.queue:
+                if len(batch) >= self.batch_size:
+                    break
+                if id(r) not in chosen:
+                    batch.append(r)
+        return batch
 
 
 def _structure_batch(fn, fusion_mode: str, params: Params, dev, ext):

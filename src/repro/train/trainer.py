@@ -190,10 +190,12 @@ class Trainer:
     # ------------------------------------------------------------------
     # The loop
     # ------------------------------------------------------------------
-    def fit(self, state: TrainState, batches: Iterator[Batch], *,
+    def fit(self, state: TrainState, batches, *,
             steps: Optional[int] = None,
             logger: Optional[MetricLogger] = None,
-            fault_injector=None) -> Tuple[TrainState, MetricLogger]:
+            fault_injector=None,
+            compose=None,
+            pipeline=None) -> Tuple[TrainState, MetricLogger]:
         """Run ``steps`` optimizer steps (or cfg.total_steps).
 
         ``fault_injector`` (``dist.fault.FaultInjector``) may raise a
@@ -207,10 +209,33 @@ class Trainer:
         (e.g. a ``DeviceSchedule``), and a loader exposing ``close()``
         (``PrefetchLoader`` / ``AsyncPacker``) has its background
         producer shut down when the loop exits.
+
+        ``compose=`` (opt-in) enables pipeline-aware batch formation: a
+        ``repro.pipeline.BatchComposer`` plus a ``pipeline=``
+        ``SchedulePipeline``.  ``batches`` must then yield EPOCH corpora
+        — ``(graphs, inputs)`` or ``(graphs, inputs, aux)`` tuples —
+        and each epoch is re-composed into cache-friendly minibatches
+        before packing.  NOTE composition REORDERS samples within an
+        epoch (losslessly: every sample exactly once); aux riders (e.g.
+        labels) are permuted in lockstep with their samples, and every
+        batch dict carries ``sample_ids`` (original corpus indices) so
+        per-sample outputs can be realigned.  Batch dicts are
+        ``{"dev": DeviceSchedule, "ext": array, **aux, "sample_ids"}``.
         """
         cfg = self.cfg
         steps = steps if steps is not None else cfg.total_steps
         logger = logger or MetricLogger()
+        source = batches        # the caller's object owns any close()
+        if compose is not None and compose is not False:
+            # (False is accepted as the natural opt-out spelling)
+            if not callable(getattr(compose, "compose", None)):
+                raise ValueError(
+                    f"compose= takes a repro.pipeline.BatchComposer "
+                    f"(or False to opt out), got {compose!r}")
+            if pipeline is None:
+                raise ValueError("compose= requires pipeline= "
+                                 "(a SchedulePipeline to pack through)")
+            batches = _composed_stream(batches, compose, pipeline)
         try:
             return self._fit(state, batches, steps, logger, fault_injector)
         finally:
@@ -218,8 +243,8 @@ class Trainer:
             # — but not plain generators, which every generator-`close()`
             # would kill even though the caller may keep consuming it
             # across fit() calls.
-            close = getattr(batches, "close", None)
-            if callable(close) and not isinstance(batches,
+            close = getattr(source, "close", None)
+            if callable(close) and not isinstance(source,
                                                   types.GeneratorType):
                 close()
 
@@ -277,6 +302,45 @@ class _nullctx:
 
     def __exit__(self, *a):
         return False
+
+
+def _composed_stream(epochs, composer, pipeline):
+    """Turn a stream of epoch corpora into composed, packed batch dicts
+    (the ``compose=`` leg of :meth:`Trainer.fit`).
+
+    Each epoch tuple is ``(graphs, inputs)`` or ``(graphs, inputs,
+    aux)``; the composer reorders it into same-fingerprint groups +
+    greedy leftover fills, the pipeline packs each composed batch
+    (cache/bucket/persist-aware) on its ASYNC prefetch stage — host
+    packing overlaps device compute, same as every other production
+    path — and the batch dict carries the aux riders and
+    ``sample_ids`` realigned to the composed order."""
+
+    def items():
+        for epoch in epochs:
+            graphs, inputs = epoch[0], epoch[1]
+            aux = epoch[2] if len(epoch) > 2 else None
+            for name in ("dev", "ext"):
+                if aux and name in aux:
+                    raise ValueError(
+                        f"aux rider name {name!r} is reserved — "
+                        f"composed batch dicts carry the "
+                        f"DeviceSchedule/external matrix under that key")
+            batches, _ = composer.compose(graphs, inputs, aux)
+            for cb in batches:
+                yield cb.as_item()
+
+    packer = pipeline.prefetch(items(), depth=2)
+    try:
+        for pb in packer:
+            batch = {"dev": pb.dev, "ext": pb.ext}
+            for name, vals in pb.aux.items():
+                batch[name] = np.asarray(vals)
+            yield batch
+    finally:
+        packer.close()                    # runs on close()/GC of this
+        # generator after fit() abandons it — the background packer
+        # never outlives the loop observably (daemon thread regardless)
 
 
 def _chain_first(first, rest):

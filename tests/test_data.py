@@ -82,3 +82,25 @@ def test_seek_restartability():
     src.next_batch(); src.next_batch()
     src.seek(10)
     assert int(src.next_batch()["i"][0]) == 10
+
+
+def test_closed_loader_raises_instead_of_hanging():
+    """Regression: next() on a closed loader used to block forever on a
+    queue no producer feeds (reachable via staged fit() calls — the
+    first fit auto-closes the loader).  close() must latch a loud end
+    state."""
+    loader = PrefetchLoader(ShardedSource(_make_iter, shard=0,
+                                          num_shards=1), depth=2)
+    next(loader)
+    loader.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        next(loader)
+    with pytest.raises(RuntimeError, match="closed"):   # stays latched
+        next(loader)
+    # a loader whose stream ended BEFORE close keeps StopIteration
+    from repro.pipeline import AsyncPacker
+    p = AsyncPacker([1, 2], lambda x: x)
+    assert list(p) == [1, 2]
+    p.close()
+    with pytest.raises(StopIteration):
+        next(p)

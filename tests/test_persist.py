@@ -1,0 +1,294 @@
+"""Persistent schedule store (PR 5 tentpole): on-disk round trips,
+corruption/version-skew recovery, and the warm-restart guarantee —
+a restarted process serves every schedule from disk and executes ZERO
+``pack_batch`` calls (asserted via pipeline stats AND by poisoning
+``pack_batch`` itself)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.pipeline.cache as cache_mod
+from repro.core.scheduler import execute, readout_roots
+from repro.core.structure import (chain, pack_batch, pack_external,
+                                  random_binary_tree)
+from repro.models.treelstm import TreeLSTMVertex
+from repro.pipeline import (SCHEMA_VERSION, BucketPolicy, ScheduleCache,
+                            SchedulePersist, SchedulePipeline,
+                            batch_fingerprint, persist_dir_default)
+from repro.pipeline.persist import MAGIC, _HEADER_LEN
+
+INPUT_DIM = 4
+
+_SCHED_FIELDS = ("child_ids", "child_mask", "ext_ids", "node_mask",
+                 "slot_of", "node_valid", "root_slots", "num_nodes",
+                 "sort_perm", "sorted_child_ids", "run_head")
+
+
+def _forest(seed, k=3, lo=2, hi=7):
+    rng = np.random.default_rng(seed)
+    graphs = [random_binary_tree(int(rng.integers(lo, hi)), rng)
+              for _ in range(k)]
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM)).astype(np.float32)
+              * 0.3 for g in graphs]
+    return graphs, inputs
+
+
+# ---------------------------------------------------------------------------
+# Round trip
+# ---------------------------------------------------------------------------
+
+def test_persist_fields_cover_level_schedule():
+    """_FIELDS is derived from the dataclass; a new LevelSchedule field
+    can never be silently dropped on round-trip (and this test's own
+    field list must grow with it)."""
+    from repro.core.structure import LevelSchedule
+    from repro.pipeline.persist import _FIELDS
+    assert set(_FIELDS) == {f.name for f in
+                            dataclasses.fields(LevelSchedule)}
+    assert set(_SCHED_FIELDS) == set(_FIELDS)
+
+
+def test_round_trip_every_field_array_equal(tmp_path):
+    graphs, _ = _forest(1, k=4)
+    sched = pack_batch(graphs, pad_arity=2)
+    key = batch_fingerprint(graphs, (None, None, 2, None))
+    store = SchedulePersist(tmp_path)
+    assert store.store(key, sched)
+    assert key in store and len(store) == 1
+    # a NEW store instance = a process restart
+    loaded = SchedulePersist(tmp_path).load(key)
+    assert loaded is not None
+    for f in _SCHED_FIELDS:
+        np.testing.assert_array_equal(getattr(sched, f), getattr(loaded, f))
+        assert getattr(sched, f).dtype == getattr(loaded, f).dtype
+
+
+def test_round_trip_preserves_absent_sorted_runs(tmp_path):
+    sched = dataclasses.replace(pack_batch([chain(3)]), sort_perm=None,
+                                sorted_child_ids=None, run_head=None)
+    store = SchedulePersist(tmp_path)
+    store.store(b"\x01" * 16, sched)
+    loaded = store.load(b"\x01" * 16)
+    assert loaded.sort_perm is None and loaded.run_head is None
+    assert loaded.sorted_child_ids is None
+    np.testing.assert_array_equal(loaded.child_ids, sched.child_ids)
+
+
+@pytest.mark.parametrize("mode,impl", [
+    ("none", "chunked"),
+    ("megastep", "pallas"),              # exercises the sorted-run arrays
+])
+def test_disk_loaded_schedule_loss_grads_bit_identical(tmp_path, mode, impl,
+                                                       monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    graphs, inputs = _forest(2)
+    fn = TreeLSTMVertex(input_dim=INPUT_DIM, hidden=4, arity=2)
+    params = fn.init(jax.random.PRNGKey(0))
+
+    def loss_and_grads(sched):
+        dev = sched.to_device()
+        ext = jnp.asarray(pack_external(inputs, sched, INPUT_DIM))
+
+        def loss(p, e):
+            buf = execute(fn, p, dev, e, fusion_mode=mode).buf
+            return jnp.sum(readout_roots(buf, dev) ** 2)
+
+        return jax.value_and_grad(loss, (0, 1))(params, ext)
+
+    fresh = pack_batch(graphs, pad_arity=2)
+    key = batch_fingerprint(graphs, (None, None, 2, None))
+    store = SchedulePersist(tmp_path)
+    store.store(key, fresh)
+    loaded = SchedulePersist(tmp_path).load(key)
+    ref, got = loss_and_grads(fresh), loss_and_grads(loaded)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Corruption / version skew: quiet misses, never crashes
+# ---------------------------------------------------------------------------
+
+def _stored(tmp_path):
+    sched = pack_batch([chain(4), chain(2)])
+    key = batch_fingerprint([chain(4), chain(2)])
+    store = SchedulePersist(tmp_path)
+    store.store(key, sched)
+    return store, key, store.path_for(key)
+
+
+def test_truncated_file_is_a_quiet_miss(tmp_path):
+    store, key, path = _stored(tmp_path)
+    blob = path.read_bytes()
+    for cut in (0, 3, _HEADER_LEN - 1, _HEADER_LEN + 5, len(blob) - 1):
+        path.write_bytes(blob[:cut])
+        fresh = SchedulePersist(tmp_path)
+        assert fresh.load(key) is None
+        assert fresh.stats()["disk_corrupt"] == 1
+
+
+def test_garbled_payload_is_a_quiet_miss(tmp_path):
+    store, key, path = _stored(tmp_path)
+    blob = bytearray(path.read_bytes())
+    blob[_HEADER_LEN + 10] ^= 0xFF        # flip one payload byte
+    path.write_bytes(bytes(blob))
+    fresh = SchedulePersist(tmp_path)
+    assert fresh.load(key) is None
+    assert fresh.stats()["disk_corrupt"] == 1
+
+
+def test_bad_magic_is_a_quiet_miss(tmp_path):
+    store, key, path = _stored(tmp_path)
+    blob = bytearray(path.read_bytes())
+    blob[0] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    assert SchedulePersist(tmp_path).load(key) is None
+
+
+def test_version_mismatch_is_a_quiet_miss(tmp_path):
+    store, key, path = _stored(tmp_path)
+    blob = bytearray(path.read_bytes())
+    off = len(MAGIC)
+    blob[off: off + 8] = np.uint64(SCHEMA_VERSION + 1).tobytes()
+    path.write_bytes(bytes(blob))
+    fresh = SchedulePersist(tmp_path)
+    assert fresh.load(key) is None
+    assert fresh.stats()["disk_stale"] == 1
+    assert fresh.stats()["disk_corrupt"] == 0
+
+
+def test_cache_recovers_from_poisoned_store(tmp_path):
+    """A corrupt entry must cost exactly one re-pack: the cache treats
+    it as a miss, packs cold, and REPLACES the bad file."""
+    graphs = [chain(5)]
+    c1 = ScheduleCache(enabled=True, persist=tmp_path)
+    c1.get_or_pack(graphs)
+    [path] = list(tmp_path.glob("*.sched"))
+    path.write_bytes(path.read_bytes()[:20])           # poison
+    c2 = ScheduleCache(enabled=True, persist=tmp_path)  # restart
+    s = c2.get_or_pack(graphs)
+    assert c2.packs == 1 and c2.disk_hits == 0
+    assert c2.persist.corrupt == 1
+    np.testing.assert_array_equal(s.child_ids, pack_batch(graphs).child_ids)
+    c3 = ScheduleCache(enabled=True, persist=tmp_path)  # healed on disk
+    c3.get_or_pack(graphs)
+    assert c3.disk_hits == 1 and c3.packs == 0
+
+
+def test_store_write_failure_is_swallowed(tmp_path, monkeypatch):
+    store = SchedulePersist(tmp_path)
+
+    def full_disk(*a, **k):
+        raise OSError(28, "No space left on device")
+
+    # chmod tricks don't bite under root (CI containers) — fail the
+    # temp-file creation itself.
+    monkeypatch.setattr("repro.pipeline.persist.tempfile.mkstemp",
+                        full_disk)
+    ok = store.store(b"\x02" * 16, pack_batch([chain(3)]))
+    assert not ok and store.store_errors == 1
+    assert list(tmp_path.glob("*")) == []   # nothing half-written
+
+
+# ---------------------------------------------------------------------------
+# The warm-restart guarantee
+# ---------------------------------------------------------------------------
+
+def test_warm_restart_executes_zero_packs(tmp_path, monkeypatch):
+    """Cold run populates the store; a 'restarted' pipeline (fresh
+    cache, same dir) serves every batch from disk — zero ``pack_batch``
+    calls, proven by stats AND by making ``pack_batch`` explode."""
+    corpora = [_forest(s) for s in range(4)]
+    cold = SchedulePipeline(INPUT_DIM, bucket_policy=BucketPolicy(),
+                            cache=ScheduleCache(enabled=True,
+                                                persist=tmp_path))
+    for graphs, inputs in corpora:
+        cold.pack(graphs, inputs)
+    assert cold.stats()["packs"] == len(corpora)
+    assert cold.stats()["disk_stores"] == len(corpora)
+
+    warm = SchedulePipeline(INPUT_DIM, bucket_policy=BucketPolicy(),
+                            cache=ScheduleCache(enabled=True,
+                                                persist=tmp_path))
+
+    def boom(*a, **k):
+        raise AssertionError("pack_batch called on the warm path")
+
+    monkeypatch.setattr(cache_mod, "pack_batch", boom)
+    for graphs, inputs in corpora:
+        pb = warm.pack(graphs, inputs)
+        assert pb.sched is not None and pb.dev is not None
+    s = warm.stats()
+    assert s["packs"] == 0
+    assert s["disk_hits"] == len(corpora)
+    assert s["hits"] == 0 and s["misses"] == len(corpora)
+    # warm-loaded results match a genuinely cold pack
+    for graphs, inputs in corpora:
+        fresh = pack_batch(graphs, *cold.pads_for(graphs))
+        got = warm.pack(graphs, inputs).sched     # now a memory hit
+        for f in _SCHED_FIELDS:
+            np.testing.assert_array_equal(getattr(fresh, f), getattr(got, f))
+
+
+def test_unusable_env_store_degrades_to_no_disk_tier(tmp_path, monkeypatch):
+    """A broken REPRO_SCHED_PERSIST dir (here: parent is a file) must
+    not take the process down — the cache runs without a disk tier.
+    An EXPLICIT persist= argument for the same path still raises."""
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("")
+    bad = str(blocker / "store")
+    monkeypatch.setenv("REPRO_SCHED_PERSIST", bad)
+    c = ScheduleCache(enabled=True)
+    assert c.persist is None
+    c.get_or_pack([chain(3)])             # fully functional without disk
+    assert c.packs == 1
+    with pytest.raises(OSError):
+        ScheduleCache(enabled=True, persist=bad)
+
+
+def test_reset_stats_resets_disk_tier(tmp_path):
+    c = ScheduleCache(enabled=True, persist=tmp_path)
+    c.get_or_pack([chain(4)])
+    assert c.persist.stores == 1 and c.packs == 1
+    c.reset_stats()
+    s = c.stats()
+    assert s["packs"] == 0 and s["disk_stores"] == 0
+    assert s["disk_load_misses"] == 0
+
+
+def test_persist_env_gate(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_SCHED_PERSIST", raising=False)
+    assert persist_dir_default() is None
+    assert ScheduleCache().persist is None
+    monkeypatch.setenv("REPRO_SCHED_PERSIST", str(tmp_path / "store"))
+    assert persist_dir_default() == str(tmp_path / "store")
+    c = ScheduleCache()
+    assert c.persist is not None
+    assert c.persist.root == tmp_path / "store"
+    # explicit False overrides the environment
+    assert ScheduleCache(persist=False).persist is None
+    # a disabled cache bypasses the disk tier entirely (pure ablation)
+    off = ScheduleCache(enabled=False)
+    off.get_or_pack([chain(3)])
+    off.get_or_pack([chain(3)])
+    assert off.packs == 2
+    assert off.persist is None or off.persist.stores == 0
+
+
+def test_persist_keys_distinguish_pads(tmp_path):
+    graphs = [chain(3), chain(5)]
+    c = ScheduleCache(enabled=True, persist=tmp_path)
+    tight = c.get_or_pack(graphs)
+    padded = c.get_or_pack(graphs, (8, 8, 1, 8))
+    assert len(list(c.persist.root.glob("*.sched"))) == 2
+    warm = ScheduleCache(enabled=True, persist=tmp_path)
+    t2 = warm.get_or_pack(graphs)
+    p2 = warm.get_or_pack(graphs, (8, 8, 1, 8))
+    assert warm.disk_hits == 2 and warm.packs == 0
+    assert (t2.T, t2.M) == (tight.T, tight.M)
+    assert (p2.T, p2.M) == (padded.T, padded.M) == (8, 8)

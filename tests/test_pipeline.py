@@ -120,6 +120,30 @@ def test_cache_distinguishes_pads():
         (tight.T + 2, tight.M + 3, tight.N + 1)
 
 
+def test_cache_get_then_get_device_counts_one_lookup():
+    """Regression: ``get_or_pack`` immediately followed by
+    ``get_or_pack_device`` on the same key is ONE logical lookup whose
+    device twin is attached after the fact — it used to be double-
+    counted (a miss/hit plus a spurious second hit), inflating
+    ``hit_rate``."""
+    graphs, _ = _forest(2)
+    cache = ScheduleCache(enabled=True, persist=False)
+    s = cache.get_or_pack(graphs)                  # the logical lookup
+    s2, d = cache.get_or_pack_device(graphs)       # twin attach, no count
+    assert s is s2 and d is not None
+    assert cache.hits == 0 and cache.misses == 1
+    assert cache.hit_rate == 0.0
+    # a LATER device lookup of the same key is its own logical lookup
+    s3, d2 = cache.get_or_pack_device(graphs)
+    assert cache.hits == 1 and cache.misses == 1
+    assert d2 is d
+    # an intervening lookup breaks the attach window
+    cache.get_or_pack(graphs)                      # hit #2, pending
+    cache.get_or_pack([chain(9)])                  # different key
+    cache.get_or_pack_device(graphs)               # full lookup: hit #3
+    assert cache.hits == 3 and cache.misses == 2
+
+
 def test_cache_lru_eviction():
     cache = ScheduleCache(capacity=2, enabled=True)
     b1, b2, b3 = [chain(3)], [chain(4)], [chain(5)]
@@ -519,3 +543,85 @@ def test_trainer_consumes_async_packer_and_closes():
     state, logger = tr.fit(state, packer, steps=30, logger=logger)
     assert logger.history[-1]["loss"] < logger.history[0]["loss"]
     assert not packer._bg._thread.is_alive()   # fit closed the producer
+
+
+def test_trainer_compose_reorders_with_aligned_riders():
+    """``Trainer.fit(compose=...)``: epoch corpora are re-composed into
+    cache-friendly batches, labels ride the reordering aligned with
+    their samples, and every batch dict carries sample_ids."""
+    from repro.models.treelstm import TreeLSTMVertex
+    from repro.pipeline import BatchComposer
+    from repro.train import MetricLogger, TrainConfig, Trainer
+
+    rng = np.random.default_rng(0)
+    fn = TreeLSTMVertex(input_dim=INPUT_DIM, hidden=4, arity=2)
+    hot = random_binary_tree(4, np.random.default_rng(1))
+    corpus = [hot if i % 2 == 0 else
+              random_binary_tree(int(rng.integers(2, 6)), rng)
+              for i in range(12)]
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM))
+              .astype(np.float32) * 0.3 for g in corpus]
+    # the label IS the sample id — alignment is then directly checkable
+    labels = list(range(12))
+    seen = []
+
+    def loss_fn(p, batch):
+        buf = execute(fn, p["cell"], batch["dev"], batch["ext"]).buf
+        root_h = readout_roots(buf, batch["dev"])
+        return jnp.mean(root_h ** 2), {}
+
+    def init(key):
+        return {"cell": fn.init(key)}
+
+    class EpochSource:
+        """Closable epoch stream: fit(compose=) must close the
+        CALLER's source, not its internal composed-stream wrapper."""
+
+        def __init__(self):
+            self.closed = False
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            return corpus, inputs, {"labels": labels}
+
+        def close(self):
+            self.closed = True
+
+    def epochs():
+        return EpochSource()
+
+    pipe = SchedulePipeline(INPUT_DIM, bucket_policy=BucketPolicy(),
+                            cache=ScheduleCache(enabled=True,
+                                                persist=False))
+    real_pack = pipe.pack
+
+    def spying_pack(graphs, inputs, aux=None, pads="policy"):
+        # host-side interception (loss_fn only runs under trace)
+        seen.append((np.asarray(aux["sample_ids"]),
+                     np.asarray(aux["labels"])))
+        return real_pack(graphs, inputs, aux, pads)
+
+    pipe.pack = spying_pack
+    tr = Trainer(loss_fn, init,
+                 TrainConfig(lr=0.01, warmup_steps=2, weight_decay=0.0,
+                             total_steps=6, log_every=1))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    logger = MetricLogger(log_fn=lambda *_: None)
+    src = epochs()
+    tr.fit(state, src, steps=6, logger=logger,
+           compose=BatchComposer(4, bucket_policy=pipe.bucket_policy),
+           pipeline=pipe)
+    assert src.closed                     # caller's source auto-closed
+    assert len(seen) >= 6
+    for ids, labs in seen:
+        np.testing.assert_array_equal(ids, labs)   # riders stay aligned
+    epoch1 = np.concatenate([ids for ids, _ in seen[:3]])
+    assert sorted(epoch1.tolist()) == list(range(12))  # lossless epoch
+    assert epoch1.tolist() != list(range(12))          # actually reordered
+    assert pipe.cache.hits + pipe.cache.misses >= 6
+
+    with pytest.raises(ValueError, match="compose= requires pipeline="):
+        tr.fit(state, epochs(), steps=1,
+               compose=BatchComposer(4))
