@@ -161,6 +161,18 @@ def bench_pipeline(col: Collector, *, n_topologies: int = 24, bs: int = 16,
     col.add("pipeline/compile_count_bucketed", bucket_census.num_shapes,
             "programs", f"{n_topologies} minibatches, pow2 buckets")
 
+    # --- lazy sorted runs: forward-only schedule size ------------------
+    # Serving pipelines pack with_runs=False (no backward ⇒ no
+    # sort_perm/sorted_child_ids/run_head): this row is the measured
+    # cache/persist entry-size ratio that buys.
+    from repro.pipeline.persist import _encode
+    full_b = sum(len(_encode(pack_batch(g, with_runs=True)))
+                 for g in corpus)
+    fwd_b = sum(len(_encode(pack_batch(g, with_runs=False)))
+                for g in corpus)
+    col.add("pipeline/forward_only_size_frac", fwd_b / full_b, "frac",
+            f"with_runs=False entry bytes / full ({n_topologies} batches)")
+
 
 def _skewed_corpus(n_samples: int, seed: int = 0):
     """A corpus with real-traffic skew: a few HOT topologies carry most

@@ -331,12 +331,21 @@ def pack_batch(
     pad_width: Optional[int] = None,
     pad_arity: Optional[int] = None,
     pad_nodes: Optional[int] = None,
+    *,
+    with_runs: bool = True,
 ) -> LevelSchedule:
     """Pack K input graphs into one level schedule (the Cavs scheduler's
     breadth-first batching, Alg. 1, precomputed host-side).
 
     ``pad_*`` fix the padded dims (for bucketing — reusing one compiled
     program across minibatches); when omitted the tightest fit is used.
+
+    ``with_runs=False`` skips the sorted-run precompute — the ~75% of
+    schedule bytes only the fused BACKWARD reads.  Forward-only
+    consumers (the serve engines) pack this way so their LRU/persist
+    stores don't carry training-only data; a runs-less schedule that
+    later reaches a backward falls back to the in-kernel argsort (or
+    use :func:`attach_sorted_runs`).
     """
     K = len(graphs)
     if K == 0:
@@ -410,14 +419,26 @@ def pack_batch(
         r = g.roots()[0] if g.roots() else g.num_nodes - 1
         root_slots[k] = slot_of[k, r]
 
-    sort_perm, sorted_cids, run_head = _sorted_runs(child_ids)
-    return LevelSchedule(
+    sched = LevelSchedule(
         child_ids=child_ids, child_mask=child_mask, ext_ids=ext_ids,
         node_mask=node_mask, slot_of=slot_of, node_valid=node_valid,
         root_slots=root_slots, num_nodes=num_nodes,
-        sort_perm=sort_perm, sorted_child_ids=sorted_cids,
-        run_head=run_head,
     )
+    return attach_sorted_runs(sched) if with_runs else sched
+
+
+def attach_sorted_runs(sched: LevelSchedule) -> LevelSchedule:
+    """Return ``sched`` with the backward's sorted-run arrays attached
+    (idempotent; computes them from ``child_ids`` when absent).  The
+    upgrade path for runs-less schedules — e.g. a forward-only persist
+    entry reloaded by a training run."""
+    if sched.sort_perm is not None and sched.sorted_child_ids is not None \
+            and sched.run_head is not None:
+        return sched
+    sort_perm, sorted_cids, run_head = _sorted_runs(sched.child_ids)
+    return dataclasses.replace(sched, sort_perm=sort_perm,
+                               sorted_child_ids=sorted_cids,
+                               run_head=run_head)
 
 
 def _sorted_runs(child_ids: np.ndarray

@@ -41,7 +41,8 @@ from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
-                                  pack_batch)
+                                  attach_sorted_runs, pack_batch)
+from repro.dist.fault import chaos_fire
 from repro.pipeline.fingerprint import batch_fingerprint
 from repro.pipeline.persist import SchedulePersist, persist_dir_default
 
@@ -112,15 +113,24 @@ class ScheduleCache:
 
     # -- lookup -----------------------------------------------------------
     def get_or_pack(self, graphs: Sequence[InputGraph],
-                    pads: Optional[Pads] = None) -> LevelSchedule:
+                    pads: Optional[Pads] = None, *,
+                    with_runs: bool = True) -> LevelSchedule:
         """The schedule for ``graphs`` under ``pads`` — cached when the
-        batch topology (and pads) have been packed before."""
-        e, key = self._lookup(graphs, pads)
+        batch topology (and pads) have been packed before.
+
+        ``with_runs=False`` (forward-only consumers) packs without the
+        backward's sorted-run arrays — ~75% smaller entries in this LRU
+        and in the persist store.  A later ``with_runs=True`` lookup of
+        the same key upgrades the cached entry in place (one host-side
+        argsort), so sharing a cache between serving and training stays
+        sound."""
+        e, key = self._lookup(graphs, pads, with_runs)
         self._pending_attach = key
         return e.sched
 
     def get_or_pack_device(self, graphs: Sequence[InputGraph],
-                           pads: Optional[Pads] = None
+                           pads: Optional[Pads] = None, *,
+                           with_runs: bool = True
                            ) -> Tuple[LevelSchedule, DeviceSchedule]:
         """Like :meth:`get_or_pack` but also returns (and caches) the
         device-resident schedule — a hit skips ``pack_batch`` AND the
@@ -134,10 +144,11 @@ class ScheduleCache:
             e = self._entries.get(pending)
             if e is not None:               # attach, don't recount
                 self._entries.move_to_end(pending)
+                self._upgrade(e, with_runs)
                 if e.dev is None:
                     e.dev = e.sched.to_device()
                 return e.sched, e.dev
-        e, _ = self._lookup(graphs, pads)
+        e, _ = self._lookup(graphs, pads, with_runs)
         if e.dev is None:
             e.dev = e.sched.to_device()
         return e.sched, e.dev
@@ -147,26 +158,45 @@ class ScheduleCache:
         p = tuple(pads) if pads is not None else (None, None, None, None)
         return batch_fingerprint(graphs, p)
 
+    @staticmethod
+    def _upgrade(e: _Entry, with_runs: bool) -> None:
+        """Attach sorted runs to a runs-less cached entry when a
+        training-path lookup needs them (invalidates the device twin,
+        which must carry the runs too)."""
+        if with_runs and e.sched.sort_perm is None:
+            e.sched = attach_sorted_runs(e.sched)
+            e.dev = None
+
     def _lookup(self, graphs: Sequence[InputGraph],
-                pads: Optional[Pads]) -> Tuple[_Entry, Optional[bytes]]:
+                pads: Optional[Pads],
+                with_runs: bool = True) -> Tuple[_Entry, Optional[bytes]]:
         self._pending_attach = None
         p = tuple(pads) if pads is not None else (None, None, None, None)
         if not self.enabled:
+            chaos_fire("pack")
             self.misses += 1
             self.packs += 1
-            return _Entry(sched=pack_batch(graphs, *p)), None
+            return _Entry(sched=pack_batch(graphs, *p,
+                                           with_runs=with_runs)), None
         key = batch_fingerprint(graphs, p)
         e = self._entries.get(key)
         if e is not None:
             self.hits += 1
             self._entries.move_to_end(key)
+            self._upgrade(e, with_runs)
             return e, key
         self.misses += 1
         sched = self.persist.load(key) if self.persist is not None else None
         if sched is not None:
             self.disk_hits += 1
+            if with_runs:
+                # A forward-only store entry reloaded by a training-path
+                # lookup: upgrade on load (don't write back — the store
+                # keeps its smaller forward-only entry).
+                sched = attach_sorted_runs(sched)
         else:
-            sched = pack_batch(graphs, *p)
+            chaos_fire("pack")
+            sched = pack_batch(graphs, *p, with_runs=with_runs)
             self.packs += 1
             if self.persist is not None:
                 self.persist.store(key, sched)

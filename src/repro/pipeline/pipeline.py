@@ -45,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
                                   pack_external)
+from repro.dist.fault import chaos_corrupt_ext
 from repro.pipeline.buckets import BucketPolicy, PadDims, ShapeCensus
 from repro.pipeline.cache import ScheduleCache
 from repro.pipeline.composer import BatchComposer, CompositionStats
@@ -75,12 +76,17 @@ class SchedulePipeline:
     def __init__(self, ext_dim: int, *,
                  bucket_policy: Optional[BucketPolicy] = BucketPolicy(),
                  cache: Optional[ScheduleCache] = None,
-                 cache_capacity: int = 128):
+                 cache_capacity: int = 128,
+                 with_runs: bool = True):
         self.ext_dim = ext_dim
         self.bucket_policy = bucket_policy
         self.cache = cache if cache is not None \
             else ScheduleCache(capacity=cache_capacity)
         self.census = ShapeCensus()
+        #: False for forward-only pipelines (serving): schedules are
+        #: packed WITHOUT the backward's sorted-run arrays, so the LRU
+        #: and persist stores stay ~4x smaller (ROADMAP hygiene item).
+        self.with_runs = with_runs
 
     # -- one batch --------------------------------------------------------
     def pads_for(self, graphs: Sequence[InputGraph]) -> Optional[PadDims]:
@@ -104,9 +110,15 @@ class SchedulePipeline:
                     f"pads must be a PadDims, None (tight) or 'policy', "
                     f"got {pads!r}")
             pads = self.pads_for(graphs)
-        sched, dev = self.cache.get_or_pack_device(graphs, pads)
+        sched, dev = self.cache.get_or_pack_device(
+            graphs, pads, with_runs=self.with_runs)
         self.census.record(sched)
-        ext = jnp.asarray(pack_external(inputs, sched, self.ext_dim))
+        ext_np = pack_external(inputs, sched, self.ext_dim)
+        # Chaos NaN-batch injection point (identity without a hook):
+        # poisons whole per-sample blocks, so a NaN can only reach the
+        # sample it was injected into.
+        ext_np = chaos_corrupt_ext(ext_np, sched)
+        ext = jnp.asarray(ext_np)
         return PackedBatch(sched=sched, dev=dev, ext=ext,
                            aux=dict(aux or {}))
 

@@ -11,6 +11,13 @@ underneath), applied to schedule compilation.
 Ordering is preserved (single producer, FIFO queue); exceptions raised
 while packing surface on the consumer thread at the batch where they
 occurred; ``close()`` stops the producer and drains the queue.
+
+Transient faults (a :class:`~repro.dist.fault.SimulatedFailure`, the
+class chaos injection and simulated node failures raise — retry-able by
+contract) are retried in place up to ``retries`` times before
+surfacing, WITHOUT dropping the item being packed: a blip on the
+background thread must not silently lose a batch from the stream.
+Deterministic errors (bad data, shape mismatches) are never retried.
 """
 
 from __future__ import annotations
@@ -18,6 +25,7 @@ from __future__ import annotations
 from typing import Any, Callable, Iterable, Iterator
 
 from repro.data.loader import BackgroundPrefetcher
+from repro.dist.fault import SimulatedFailure, chaos_fire
 
 
 class AsyncPacker:
@@ -27,15 +35,31 @@ class AsyncPacker:
     batches onto the device (``examples/train_lm.py``)."""
 
     def __init__(self, source: Iterable[Any],
-                 pack_fn: Callable[[Any], Any], *, depth: int = 2):
+                 pack_fn: Callable[[Any], Any], *, depth: int = 2,
+                 retries: int = 2):
         self._source: Iterator[Any] = iter(source)
         self._pack_fn = pack_fn
+        self._retries = retries
         self.packed = 0                   # batches produced so far
+        self.transient_retries = 0        # SimulatedFailures absorbed
         self._bg = BackgroundPrefetcher(self._produce, depth=depth)
 
     def _produce(self) -> Any:
         item = next(self._source)         # StopIteration ends the stream
-        out = self._pack_fn(item)
+        attempt = 0
+        while True:
+            try:
+                chaos_fire("prefetch")
+                out = self._pack_fn(item)
+                break
+            except SimulatedFailure:
+                # Transient by contract: retry the SAME item so the
+                # stream never loses a batch; give up after the budget
+                # (the consumer then sees the failure at this batch).
+                attempt += 1
+                if attempt > self._retries:
+                    raise
+                self.transient_retries += 1
         self.packed += 1
         return out
 

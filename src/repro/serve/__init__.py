@@ -1,9 +1,16 @@
 """Serving substrate: slot-based KV cache + continuous-batching engines
-(transformer decode and the fusion-aware vertex-function decode)."""
+(transformer decode, the fusion-aware vertex-function decode, and
+whole-structure scoring), hardened by the robustness layer (lifecycle
+guards, poison quarantine, degradation ladder)."""
 
 from repro.serve.kv_cache import CacheSlots
-from repro.serve.engine import (Request, ServeEngine, VertexRequest,
+from repro.serve.engine import (Request, ServeEngine, StructureRequest,
+                                StructureServeEngine, VertexRequest,
                                 VertexServeEngine)
+from repro.serve.robustness import (CircuitBreaker, RequestLifecycle,
+                                    TERMINAL, quarantine_bisect)
 
-__all__ = ["CacheSlots", "Request", "ServeEngine", "VertexRequest",
-           "VertexServeEngine"]
+__all__ = ["CacheSlots", "Request", "ServeEngine", "StructureRequest",
+           "StructureServeEngine", "VertexRequest", "VertexServeEngine",
+           "CircuitBreaker", "RequestLifecycle", "TERMINAL",
+           "quarantine_bisect"]

@@ -38,12 +38,26 @@ Three engines live here:
     and the host→device copy), padded to bucket boundaries (one
     compiled megastep program per bucket, not per shape), and executed
     as one fused batched forward.
+
+All three engines share the robustness layer (``serve/robustness.py``):
+``submit`` validates at the door and REJECTS (terminal status, never an
+exception) on garbage or a full queue; every request carries an
+optional ``ttl`` that becomes a hard deadline; every submitted request
+reaches exactly one terminal status (``ok``/``timeout``/``rejected``/
+``failed``) and lands in ``engine.finished``; ``engine.health()``
+reports queue depth, oldest wait, deadline misses, degradations and
+quarantines.  The fused engines degrade to the op-by-op oracle on
+kernel failure (a :class:`~repro.serve.robustness.CircuitBreaker` pins
+the oracle after ``breaker_threshold`` consecutive failures), and
+:class:`StructureServeEngine` quarantines poisoned batches by
+bisection so one bad request never takes down its co-batched peers.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -53,12 +67,44 @@ import numpy as np
 from repro.core.scheduler import execute, readout_roots, resolve_fusion
 from repro.core.structure import InputGraph
 from repro.core.vertex import VertexIO
+from repro.dist.fault import chaos_fire
 from repro.kernels import ops as kops
 from repro.pipeline import (BucketPolicy, SchedulePipeline,
                             graph_fingerprint)
 from repro.serve.kv_cache import CacheSlots
+from repro.serve.robustness import (ACTIVE, CircuitBreaker,
+                                    RequestLifecycle, quarantine_bisect,
+                                    validate_prompt, validate_sequence,
+                                    validate_structure)
 
 Params = Any
+
+
+class _EngineBase:
+    """Lifecycle plumbing shared by the three engines: ``queue`` and
+    ``finished`` are views onto the :class:`RequestLifecycle` (so the
+    bounded-queue/terminal-status invariants cannot be bypassed), and
+    ``health()`` is the lifecycle's counters plus engine extras."""
+
+    lifecycle: RequestLifecycle
+
+    @property
+    def queue(self) -> List[Any]:
+        return self.lifecycle.queue
+
+    @queue.setter
+    def queue(self, reqs: List[Any]) -> None:
+        self.lifecycle.queue = list(reqs)
+
+    @property
+    def finished(self) -> List[Any]:
+        return self.lifecycle.finished
+
+    def health(self) -> Dict[str, Any]:
+        return self.lifecycle.health(**self._health_extra())
+
+    def _health_extra(self) -> Dict[str, Any]:
+        return {}
 
 
 @dataclasses.dataclass
@@ -67,12 +113,15 @@ class Request:
     prompt: np.ndarray               # [prompt_len] int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    ttl: Optional[float] = None      # seconds from submit to deadline
     # -- filled by the engine ------------------------------------------
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "new"              # lifecycle: serve/robustness.py
+    error: Optional[str] = None
 
 
-class ServeEngine:
+class ServeEngine(_EngineBase):
     """Slot-pool continuous batching over a ``TransformerLM``-style model.
 
     ``model`` must expose ``prefill(params, tokens, frontend=None)`` →
@@ -83,7 +132,9 @@ class ServeEngine:
     def __init__(self, model, params: Params, *, num_slots: int,
                  max_len: int, cross_len: int = 0,
                  greedy: bool = True, rng: Optional[jax.Array] = None,
-                 pad_prompts: bool = True):
+                 pad_prompts: bool = True,
+                 max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         #: prompt-length bucketing is exact for attention caches (masked
         #: by kv_len) but NOT for SSM states (pads roll into the state);
         #: engines over SSM/hybrid archs must pass ``pad_prompts=False``.
@@ -96,8 +147,7 @@ class ServeEngine:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         cache = model.init_cache(num_slots, max_len, cross_len=cross_len)
         self.slots = CacheSlots.create(cache, num_slots)
-        self.queue: List[Request] = []
-        self.finished: List[Request] = []
+        self.lifecycle = RequestLifecycle(max_queue=max_queue, clock=clock)
         self._last_token = np.zeros(num_slots, np.int32)
         # jit once; shapes never change across ticks (the Cavs property).
         self._decode = jax.jit(model.decode_step)
@@ -106,16 +156,21 @@ class ServeEngine:
         self._live_requests: Dict[int, Request] = {}
 
     # -- ingress ------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request) -> bool:
+        """Validate + enqueue; returns False (and routes ``req`` to the
+        ``rejected`` terminal) on garbage input or a full queue."""
+        err = validate_prompt(req.prompt, self.max_len, req.max_new_tokens)
+        return self.lifecycle.submit(req, err)
 
     # -- one engine tick -------------------------------------------------------
     def step(self) -> int:
         """Admit + decode one token for all active slots.  Returns the
         number of live requests after the tick."""
+        self.lifecycle.sweep_deadlines()
+        self._retire_expired()
         self._admit()
         if self.slots.num_active == 0:
-            return 0
+            return len(self.queue)
         # .copy(): _last_token is mutated in place after this tick, and
         # jnp.asarray of numpy is zero-copy on CPU (aliasing + async
         # dispatch = race).  positions_device() copies likewise.
@@ -141,8 +196,13 @@ class ServeEngine:
                 len(req.output) >= req.max_new_tokens or \
                 int(self.slots.positions[slot]) >= self.max_len
             if stop:
-                req.done = True
-                self.finished.append(req)
+                self._live_requests.pop(req.request_id, None)
+                self.lifecycle.finish_ok(req)
+                self.slots.retire(slot)
+            elif self.lifecycle.expired(req):
+                # In-flight deadline: retire with whatever decoded so far.
+                self._live_requests.pop(req.request_id, None)
+                self.lifecycle.finish_timeout(req)
                 self.slots.retire(slot)
         return self.slots.num_active + len(self.queue)
 
@@ -154,11 +214,24 @@ class ServeEngine:
         return self.finished
 
     # -- internals ------------------------------------------------------------
+    def _retire_expired(self) -> None:
+        """Retire in-flight requests whose deadline passed between ticks
+        (partial output stays on the request)."""
+        for slot in range(self.num_slots):
+            if not self.slots.active[slot]:
+                continue
+            req = self._req_by_id(self.slots.request_of[slot])
+            if self.lifecycle.expired(req):
+                self._live_requests.pop(req.request_id, None)
+                self.lifecycle.finish_timeout(req)
+                self.slots.retire(slot)
+
     def _admit(self) -> None:
         free = self.slots.free_slots()
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.pop(0)
+            req.status = ACTIVE
             # Bucket the prompt length to a power of two: one compiled
             # prefill program per bucket, not per length (the
             # recompilation cost Cavs exists to avoid).  The pad is on
@@ -206,6 +279,10 @@ class ServeEngine:
         self.rng, sub = jax.random.split(self.rng)
         return jax.random.categorical(sub, logits).astype(jnp.int32)
 
+    def _health_extra(self) -> Dict[str, Any]:
+        return {"active_slots": int(self.slots.num_active),
+                "num_slots": self.num_slots, "ticks": self.ticks}
+
 
 # ---------------------------------------------------------------------------
 # Vertex-function serving (the Cavs decode path, fusion_mode-aware)
@@ -222,16 +299,19 @@ class VertexRequest:
 
     request_id: int
     inputs: np.ndarray
+    ttl: Optional[float] = None      # seconds from submit to deadline
     # -- filled by the engine ------------------------------------------
     final_state: Optional[np.ndarray] = None
     done: bool = False
+    status: str = "new"              # lifecycle: serve/robustness.py
+    error: Optional[str] = None
 
     @property
     def length(self) -> int:
         return int(self.inputs.shape[0])
 
 
-class VertexServeEngine:
+class VertexServeEngine(_EngineBase):
     """Continuous batching for arity-1 vertex functions (LSTM/GRU).
 
     Each tick advances every active slot by one vertex: slot ``m``
@@ -253,7 +333,10 @@ class VertexServeEngine:
     """
 
     def __init__(self, fn, params: Params, *, num_slots: int,
-                 fusion_mode: str = "auto"):
+                 fusion_mode: str = "auto",
+                 max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 breaker_threshold: int = 3):
         if getattr(fn, "arity", None) != 1:
             raise ValueError(
                 f"VertexServeEngine decodes chains (arity-1 cells); "
@@ -267,33 +350,46 @@ class VertexServeEngine:
         self._parity = 0
         self._pos = np.zeros(num_slots, np.int64)
         self._slot_req: List[Optional[VertexRequest]] = [None] * num_slots
-        self.queue: List[VertexRequest] = []
-        self.finished: List[VertexRequest] = []
+        self.lifecycle = RequestLifecycle(max_queue=max_queue, clock=clock)
+        self._breaker = CircuitBreaker(breaker_threshold)
         self.ticks = 0
         self._tick = jax.jit(functools.partial(_vertex_tick, fn, self.spec))
+        # The degradation rung: the same tick with spec=None is the
+        # op-by-op oracle (gather → apply → scatter, no megastep).
+        self._tick_oracle = jax.jit(functools.partial(_vertex_tick, fn,
+                                                      None))
 
     @property
     def fused(self) -> bool:
-        """True when ticks run as single megastep launches."""
-        return self.spec is not None
+        """True when ticks run as single megastep launches (False once
+        the circuit breaker has pinned the oracle)."""
+        return self.spec is not None and not self._breaker.open
 
     @property
     def num_active(self) -> int:
         return sum(r is not None for r in self._slot_req)
 
     # -- ingress ------------------------------------------------------------
-    def submit(self, req: VertexRequest) -> None:
-        if req.length < 1:
-            raise ValueError("empty request")
-        self.queue.append(req)
+    def submit(self, req: VertexRequest) -> bool:
+        """Validate + enqueue; returns False (and routes ``req`` to the
+        ``rejected`` terminal) on garbage input or a full queue."""
+        err = validate_sequence(req.inputs, self.fn.input_dim)
+        return self.lifecycle.submit(req, err)
 
     # -- one engine tick -----------------------------------------------------
     def step(self) -> int:
         """Admit + advance every active slot one vertex.  Returns live
         requests (active + queued) after the tick."""
+        self.lifecycle.sweep_deadlines()
+        for m, req in enumerate(self._slot_req):
+            if req is not None and self.lifecycle.expired(req):
+                self.lifecycle.finish_timeout(req)
+                self._slot_req[m] = None
         for m in range(self.num_slots):
             if self._slot_req[m] is None and self.queue:
-                self._slot_req[m] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                req.status = ACTIVE
+                self._slot_req[m] = req
                 self._pos[m] = 0
         if self.num_active == 0:
             return len(self.queue)
@@ -313,12 +409,21 @@ class VertexServeEngine:
             if self._pos[m] > 0:
                 child_ids[m, 0] = base + m
                 child_mask[m, 0] = 1.0
-        self._buf = self._tick(self.params, self._buf,
-                               jnp.asarray(child_ids),
-                               jnp.asarray(child_mask),
-                               jnp.asarray(ext_rows),
-                               jnp.asarray(node_mask),
-                               jnp.int32(out_base))
+        args = (self.params, self._buf, jnp.asarray(child_ids),
+                jnp.asarray(child_mask), jnp.asarray(ext_rows),
+                jnp.asarray(node_mask), jnp.int32(out_base))
+        try:
+            self._buf = self._run_tick(args)
+        except Exception as e:           # noqa: BLE001 — oracle failed too
+            # Both rungs of the ladder failed: the whole tick is lost
+            # (the buffer was not advanced), so every in-flight request
+            # reaches the ``failed`` terminal — queued requests are
+            # untouched and will be admitted next tick.
+            for m, req in enumerate(self._slot_req):
+                if req is not None:
+                    self.lifecycle.finish_failed(req, f"tick failed: {e}")
+                    self._slot_req[m] = None
+            return self.num_active + len(self.queue)
         self._parity = 1 - self._parity
         self.ticks += 1
 
@@ -331,10 +436,26 @@ class VertexServeEngine:
                 if done_rows is None:
                     done_rows = np.asarray(self._buf[out_base: out_base + M])
                 req.final_state = done_rows[m].copy()
-                req.done = True
-                self.finished.append(req)
+                self.lifecycle.finish_ok(req)
                 self._slot_req[m] = None
         return self.num_active + len(self.queue)
+
+    def _run_tick(self, args: Tuple) -> jax.Array:
+        """One tick through the degradation ladder: fused megastep
+        first; on failure fall back to the op-by-op oracle for THIS tick
+        (same math, no fused kernel), and once the breaker trips, pin
+        the oracle without re-trying the fused path."""
+        if self.fused:
+            try:
+                chaos_fire("kernel")
+                out = self._tick(*args)
+                out.block_until_ready()  # surface async kernel failures
+                self._breaker.record_success()
+                return out
+            except Exception:            # noqa: BLE001 — degrade
+                self._breaker.record_failure()
+                self.lifecycle.degradations += 1
+        return self._tick_oracle(*args)
 
     def run(self, max_ticks: int = 100_000) -> List[VertexRequest]:
         """Drain the queue; returns finished requests."""
@@ -342,6 +463,11 @@ class VertexServeEngine:
             if self.step() == 0:
                 break
         return self.finished
+
+    def _health_extra(self) -> Dict[str, Any]:
+        return {"active_slots": self.num_active, "ticks": self.ticks,
+                "breaker_open": self._breaker.open,
+                "breaker_trips": self._breaker.trips}
 
 
 # ---------------------------------------------------------------------------
@@ -357,12 +483,15 @@ class StructureRequest:
     request_id: int
     graph: InputGraph
     inputs: np.ndarray
+    ttl: Optional[float] = None      # seconds from submit to deadline
     # -- filled by the engine ------------------------------------------
     root_state: Optional[np.ndarray] = None
     done: bool = False
+    status: str = "new"              # lifecycle: serve/robustness.py
+    error: Optional[str] = None
 
 
-class StructureServeEngine:
+class StructureServeEngine(_EngineBase):
     """Batch scoring of queued structures through the schedule pipeline.
 
     Each :meth:`step` dequeues up to ``batch_size`` requests and runs
@@ -385,41 +514,58 @@ class StructureServeEngine:
 
     def __init__(self, fn, params: Params, *, batch_size: int = 16,
                  pipeline: Optional[SchedulePipeline] = None,
-                 fusion_mode: str = "auto", compose: bool = True):
+                 fusion_mode: str = "auto", compose: bool = True,
+                 max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 breaker_threshold: int = 3,
+                 guard_nonfinite: bool = True):
         self.fn = fn
         self.params = params
         self.batch_size = batch_size
         self.compose = compose
         self.pipeline = pipeline if pipeline is not None else \
             SchedulePipeline(fn.input_dim,
-                             bucket_policy=BucketPolicy(mode="pow2"))
-        self.queue: List[StructureRequest] = []
-        self._queued_ids: set = set()     # id(req) of pending requests
-        self.finished: List[StructureRequest] = []
+                             bucket_policy=BucketPolicy(mode="pow2"),
+                             # forward-only consumer: pack without the
+                             # backward's sorted-run arrays (~4x smaller
+                             # cache/persist entries)
+                             with_runs=False)
+        self.lifecycle = RequestLifecycle(max_queue=max_queue, clock=clock)
+        self._breaker = CircuitBreaker(breaker_threshold)
+        #: a request whose finite inputs still produced a non-finite
+        #: root state (model blowup, chaos NaN injection past the door)
+        #: fails ALONE — NaNs are block-diagonal in the batched forward,
+        #: so attribution is direct, no bisection needed.
+        self.guard_nonfinite = guard_nonfinite
+        self._fusion = fusion_mode
         self.batches = 0
         self._run = jax.jit(functools.partial(_structure_batch, fn,
                                               fusion_mode))
+        self._run_oracle = jax.jit(functools.partial(_structure_batch, fn,
+                                                     "none"))
 
     # -- ingress ------------------------------------------------------------
-    def submit(self, req: StructureRequest) -> None:
-        if req.graph.num_nodes < 1:
-            raise ValueError("empty structure")
-        if req.inputs.shape[0] != req.graph.num_nodes:
-            raise ValueError(
-                f"request {req.request_id}: {req.inputs.shape[0]} input "
-                f"rows for {req.graph.num_nodes} nodes")
-        if id(req) in self._queued_ids:
-            # the engine fills req in place and the flush path tracks
-            # queue entries by identity — one object, one pending score
-            raise ValueError(
-                f"request {req.request_id} is already queued")
-        self._queued_ids.add(id(req))
-        self.queue.append(req)
+    def submit(self, req: StructureRequest) -> bool:
+        """Validate + enqueue; returns False (and routes ``req`` to the
+        ``rejected`` terminal) on a malformed structure, non-finite
+        inputs, a full queue, or a double-submitted request object (the
+        engine fills requests in place — one object, one lifecycle)."""
+        err = validate_structure(req.graph, req.inputs, self.fn.input_dim)
+        if err is not None:
+            err = f"request {req.request_id}: {err}"
+        return self.lifecycle.submit(req, err)
+
+    @property
+    def fused(self) -> bool:
+        """True while batches attempt the fused forward (False once the
+        circuit breaker has pinned the op-by-op oracle)."""
+        return self._fusion != "none" and not self._breaker.open
 
     # -- one engine batch ----------------------------------------------------
     def step(self) -> int:
         """Score one batch of queued requests.  Returns requests still
         queued after the batch."""
+        self.lifecycle.sweep_deadlines()
         if not self.queue:
             return 0
         reqs = (self._compose_flush() if self.compose
@@ -427,16 +573,32 @@ class StructureServeEngine:
         taken = set(id(r) for r in reqs)   # by identity: requests hold
         self.queue = [r for r in self.queue  # ndarrays, so == is unusable
                       if id(r) not in taken]
-        self._queued_ids -= taken
-        batch = self.pipeline.pack([r.graph for r in reqs],
-                                   [np.asarray(r.inputs, np.float32)
-                                    for r in reqs])
-        roots = np.asarray(self._run(self.params, batch.dev, batch.ext))
+        for r in reqs:
+            r.status = ACTIVE
+
+        poisoned = [False]
+
+        def run_fn(batch_reqs):
+            try:
+                return self._run_batch(batch_reqs)
+            except Exception:
+                poisoned[0] = True
+                raise
+
+        def on_fail(req, exc):
+            self.lifecycle.finish_failed(
+                req, f"batch execution failed: {exc}")
+
+        pairs = quarantine_bisect(list(reqs), run_fn, on_fail)
+        if poisoned[0]:
+            self.lifecycle.quarantines += 1
         self.batches += 1
-        for k, req in enumerate(reqs):
-            req.root_state = roots[k].copy()
-            req.done = True
-            self.finished.append(req)
+        for req, root in pairs:
+            if self.guard_nonfinite and not np.isfinite(root).all():
+                self.lifecycle.finish_failed(req, "non-finite root state")
+                continue
+            req.root_state = root.copy()
+            self.lifecycle.finish_ok(req)
         return len(self.queue)
 
     def run(self, max_batches: int = 10_000) -> List[StructureRequest]:
@@ -466,6 +628,37 @@ class StructureServeEngine:
                 if id(r) not in chosen:
                     batch.append(r)
         return batch
+
+    def _run_batch(self, reqs: List[StructureRequest]) -> List[np.ndarray]:
+        """Pack + score one (sub-)batch; per-request root-state rows.
+        Raises on pack or kernel failure — the quarantine bisect above
+        narrows the blast radius to the poisoned request."""
+        batch = self.pipeline.pack([r.graph for r in reqs],
+                                   [np.asarray(r.inputs, np.float32)
+                                    for r in reqs])
+        roots = np.asarray(self._score(batch.dev, batch.ext))
+        return [roots[k] for k in range(len(reqs))]
+
+    def _score(self, dev, ext) -> jax.Array:
+        """The degradation ladder: fused forward first; on failure fall
+        back to the op-by-op oracle for THIS batch, and once the breaker
+        trips, pin the oracle without re-trying the fused path."""
+        if self.fused:
+            try:
+                chaos_fire("kernel")
+                out = self._run(self.params, dev, ext)
+                out.block_until_ready()  # surface async kernel failures
+                self._breaker.record_success()
+                return out
+            except Exception:            # noqa: BLE001 — degrade
+                self._breaker.record_failure()
+                self.lifecycle.degradations += 1
+        return self._run_oracle(self.params, dev, ext)
+
+    def _health_extra(self) -> Dict[str, Any]:
+        return {"batches": self.batches,
+                "breaker_open": self._breaker.open,
+                "breaker_trips": self._breaker.trips}
 
 
 def _structure_batch(fn, fusion_mode: str, params: Params, dev, ext):

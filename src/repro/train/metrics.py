@@ -22,6 +22,14 @@ class MetricLogger:
         self._t_last: Optional[float] = None
         self._step_times: collections.deque = collections.deque(maxlen=window)
         self.history: List[Dict[str, float]] = []
+        #: monotone event counters (e.g. the trainer's
+        #: ``nonfinite_skips``) — health surface, not windowed stats.
+        self.counters: collections.Counter = collections.Counter()
+
+    def count(self, key: str, n: int = 1) -> int:
+        """Bump (and return) the monotone counter ``key``."""
+        self.counters[key] += n
+        return self.counters[key]
 
     def step(self, step: int, metrics: Dict[str, Any]) -> Dict[str, float]:
         now = time.perf_counter()

@@ -66,6 +66,13 @@ class TrainConfig:
     ckpt_keep: int = 3
     log_every: int = 10
     compress_grads: bool = False      # int8+EF on the DP reduction
+    #: non-finite-gradient guard: a step whose loss or global grad norm
+    #: is NaN/Inf is SKIPPED inside the jitted step (params and moments
+    #: kept, step counter advanced — the poisoned batch is dropped) …
+    skip_nonfinite: bool = True
+    #: … up to this many CONSECUTIVE skips; one more aborts the run
+    #: (persistent divergence is a bug, not weather).
+    max_skip_steps: int = 10
 
 
 class Trainer:
@@ -86,11 +93,14 @@ class Trainer:
                      if cfg.ckpt_dir else None)
         self._train_step = None
         self._ef_state = None            # error-feedback residual (pytree)
+        self._init_rng = None            # recorded by init_state for
+        #                                  crash-before-first-commit re-init
 
     # ------------------------------------------------------------------
     # State init / restore
     # ------------------------------------------------------------------
     def init_state(self, rng: jax.Array) -> TrainState:
+        self._init_rng = rng
         if self.mesh is not None:
             specs = None
 
@@ -162,7 +172,23 @@ class Trainer:
                 metrics = dict(metrics)
                 metrics.update(opt_metrics)
                 metrics["loss"] = loss
-                return TrainState(params=new_params, opt=new_opt), metrics
+                new_state = TrainState(params=new_params, opt=new_opt)
+                if cfg.skip_nonfinite:
+                    # Non-finite guard, resolved inside the jitted step
+                    # (no host round-trip): a NaN/Inf loss or gradient
+                    # keeps the old params and moments — the poisoned
+                    # batch is dropped — but the step counter advances,
+                    # so the lr schedule and checkpoint cadence move on.
+                    ok = (jnp.isfinite(loss)
+                          & jnp.isfinite(opt_metrics["grad_norm"]))
+                    kept = TrainState(
+                        params=state.params,
+                        opt=OptState(step=new_opt.step, mu=state.opt.mu,
+                                     nu=state.opt.nu))
+                    new_state = jax.tree.map(
+                        lambda a, b: jnp.where(ok, a, b), new_state, kept)
+                    metrics["skipped"] = 1.0 - ok.astype(jnp.float32)
+                return new_state, metrics
 
             if rules is not None:
                 with axis_rules(rules):
@@ -262,6 +288,7 @@ class Trainer:
                 batches = _chain_first(first, batches)
 
             done = start
+            skips_in_row = 0
             while done < steps:
                 batch = next(batches)
                 batch = {k: jax.tree.map(jnp.asarray, v)
@@ -275,6 +302,16 @@ class Trainer:
                         raise
                     # Node failure: restore last commit and continue.
                     self.ckpt.wait()
+                    if self.ckpt.latest_step() is None:
+                        # Crashed before the FIRST commit: there is
+                        # nothing to restore, so re-init from the
+                        # recorded init rng — restoring into the zeroed
+                        # twin here used to resume from all-zero params
+                        # (a silently different model).
+                        rng = (self._init_rng if self._init_rng is not None
+                               else jax.random.PRNGKey(0))
+                        state, done = self.init_state(rng), 0
+                        continue
                     # state was donated — rebuild an abstract twin to
                     # restore into.
                     abstract = jax.eval_shape(
@@ -286,6 +323,20 @@ class Trainer:
                         lambda s: jnp.zeros(s.shape, s.dtype), abstract)
                     state, done = self.maybe_restore(zeros)
                     continue
+                if cfg.skip_nonfinite:
+                    if float(np.asarray(metrics.get("skipped", 0.0))) > 0:
+                        skips_in_row += 1
+                        logger.count("nonfinite_skips")
+                        if skips_in_row > cfg.max_skip_steps:
+                            raise RuntimeError(
+                                f"aborting at step {done}: "
+                                f"{skips_in_row} consecutive non-finite "
+                                f"steps (max_skip_steps="
+                                f"{cfg.max_skip_steps}) — the model has "
+                                f"diverged, skipping batches cannot "
+                                f"save it")
+                    else:
+                        skips_in_row = 0
                 done += 1
                 if done % cfg.log_every == 0 or done == steps:
                     logger.log(done, metrics)

@@ -291,18 +291,22 @@ def test_structure_serve_engine_composes_pending_requests():
 
 
 def test_structure_serve_engine_rejects_duplicate_submission():
-    """The flush path tracks queue entries by identity, so one request
-    object may be pending at most once (re-submission used to behave
-    differently between FIFO and composed flushes)."""
+    """The flush path tracks queue entries by identity and the engine
+    fills requests in place, so one request object may be pending at
+    most once — a re-submission is REJECTED (counted, returns False)
+    without disturbing the original's pending lifecycle."""
     fn = TreeLSTMVertex(input_dim=INPUT_DIM, hidden=4, arity=2)
     params = fn.init(jax.random.PRNGKey(0))
     eng = StructureServeEngine(fn, params)
     g = random_binary_tree(2, np.random.default_rng(0))
     req = StructureRequest(0, g, np.zeros((g.num_nodes, INPUT_DIM),
                                           np.float32))
-    eng.submit(req)
-    with pytest.raises(ValueError, match="already queued"):
-        eng.submit(req)
+    assert eng.submit(req) is True
+    assert eng.submit(req) is False
+    assert req.status == "pending" and len(eng.queue) == 1
+    assert eng.health()["rejected"] == 1
+    done = eng.run()
+    assert len(done) == 1 and done[0].status == "ok"
 
 
 def test_structure_serve_engine_compose_matches_fifo_results():

@@ -190,7 +190,8 @@ def test_store_write_failure_is_swallowed(tmp_path, monkeypatch):
     # temp-file creation itself.
     monkeypatch.setattr("repro.pipeline.persist.tempfile.mkstemp",
                         full_disk)
-    ok = store.store(b"\x02" * 16, pack_batch([chain(3)]))
+    with pytest.warns(RuntimeWarning, match="degrading to cold packs"):
+        ok = store.store(b"\x02" * 16, pack_batch([chain(3)]))
     assert not ok and store.store_errors == 1
     assert list(tmp_path.glob("*")) == []   # nothing half-written
 
@@ -292,3 +293,108 @@ def test_persist_keys_distinguish_pads(tmp_path):
     assert warm.disk_hits == 2 and warm.packs == 0
     assert (t2.T, t2.M) == (tight.T, tight.M)
     assert (p2.T, p2.M) == (padded.T, padded.M) == (8, 8)
+
+
+# ---------------------------------------------------------------------------
+# Store GC: size/age caps, LRU-by-mtime pruning, warn-once degradation
+# ---------------------------------------------------------------------------
+
+import os
+import warnings
+
+from repro.core.structure import LevelSchedule  # noqa: E402
+
+
+def _fill(store, n, start=0):
+    """Store n distinct schedules with strictly increasing mtimes."""
+    keys = []
+    for i in range(start, start + n):
+        key = bytes([i]) * 16
+        store.store(key, pack_batch([chain(2 + i % 3)]))
+        os.utime(store.path_for(key), (1000.0 + i, 1000.0 + i))
+        keys.append(key)
+    return keys
+
+
+def test_gc_entry_cap_prunes_oldest_first(tmp_path):
+    store = SchedulePersist(tmp_path)
+    keys = _fill(store, 4)               # fill unbounded, then cap
+    store.max_entries = 2
+    assert store.gc(now=1010.0) == 2
+    assert keys[0] not in store and keys[1] not in store
+    assert keys[2] in store and keys[3] in store
+    assert store.gc_removed == 2 and store.stats()["disk_gc_removed"] == 2
+
+
+def test_gc_byte_cap(tmp_path):
+    store = SchedulePersist(tmp_path)
+    keys = _fill(store, 3)
+    one = store.path_for(keys[0]).stat().st_size
+    store.max_bytes = int(one * 2.5)     # room for two entries, not three
+    assert store.gc(now=1010.0) == 1
+    assert keys[0] not in store and keys[1] in store and keys[2] in store
+    assert store.size_bytes() <= store.max_bytes
+
+
+def test_gc_age_cap(tmp_path):
+    store = SchedulePersist(tmp_path)
+    keys = _fill(store, 3)               # mtimes 1000, 1001, 1002
+    store.max_age_s = 5.0
+    assert store.gc(now=1006.5) == 2     # 1000 and 1001 aged out
+    assert keys[2] in store
+
+
+def test_gc_runs_after_each_store(tmp_path):
+    """The cap is enforced on the write path, not only on manual gc()."""
+    store = SchedulePersist(tmp_path, max_entries=2)
+    _fill(store, 5)
+    assert len(store) <= 2 + 1           # at most one over before its gc
+    store.gc()
+    assert len(store) == 2
+
+
+def test_load_touch_keeps_entry_hot(tmp_path):
+    """A loaded entry's mtime is refreshed, so LRU pruning removes the
+    UNUSED entry, not the recently-read one."""
+    store = SchedulePersist(tmp_path)
+    keys = _fill(store, 2)               # keys[0] older than keys[1]
+    # read the OLD entry: its mtime moves past keys[1]'s
+    assert store.load(keys[0]) is not None
+    store.max_entries = 1
+    assert store.gc() == 1
+    assert keys[0] in store and keys[1] not in store
+
+
+def test_gc_env_knobs(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SCHED_PERSIST_MAX_ENTRIES", "2")
+    monkeypatch.setenv("REPRO_SCHED_PERSIST_MAX_MB", "1.5")
+    monkeypatch.setenv("REPRO_SCHED_PERSIST_MAX_AGE_S", "60")
+    store = SchedulePersist(tmp_path)
+    assert store.max_entries == 2
+    assert store.max_bytes == int(1.5 * 1024 * 1024)
+    assert store.max_age_s == 60.0
+    # explicit args override the environment
+    pinned = SchedulePersist(tmp_path, max_entries=7)
+    assert pinned.max_entries == 7
+
+
+def test_unbounded_store_never_gcs(tmp_path):
+    store = SchedulePersist(tmp_path)
+    _fill(store, 4)
+    assert store.gc() == 0 and len(store) == 4
+
+
+def test_store_failure_warns_exactly_once(tmp_path, monkeypatch):
+    store = SchedulePersist(tmp_path)
+
+    def full_disk(*a, **k):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr("repro.pipeline.persist.tempfile.mkstemp",
+                        full_disk)
+    with pytest.warns(RuntimeWarning, match="degrading to cold packs"):
+        store.store(b"\x03" * 16, pack_batch([chain(3)]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # a second warn would raise
+        store.store(b"\x04" * 16, pack_batch([chain(4)]))
+    assert store.store_errors == 2

@@ -505,9 +505,14 @@ def test_structure_serve_engine_validates_inputs():
     params = fn.init(jax.random.PRNGKey(0))
     eng = StructureServeEngine(fn, params)
     g = chain(3)
-    with pytest.raises(ValueError, match="4 input rows for 3 nodes"):
-        eng.submit(StructureRequest(0, g, np.zeros((4, INPUT_DIM),
-                                                   np.float32)))
+    req = StructureRequest(0, g, np.zeros((4, INPUT_DIM), np.float32))
+    # Validation failures REJECT terminally (return False) instead of
+    # raising: every submitted request reaches a terminal status.
+    assert eng.submit(req) is False
+    assert req.status == "rejected" and req.done
+    assert "4 input rows for 3 nodes" in req.error
+    assert req in eng.finished and not eng.queue
+    assert eng.health()["rejected"] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -625,3 +630,93 @@ def test_trainer_compose_reorders_with_aligned_riders():
     with pytest.raises(ValueError, match="compose= requires pipeline="):
         tr.fit(state, epochs(), steps=1,
                compose=BatchComposer(4))
+
+
+# ---------------------------------------------------------------------------
+# Lazy sorted runs: with_runs=False packing + cache upgrade coherence
+# ---------------------------------------------------------------------------
+
+def test_pack_batch_with_runs_false_omits_run_arrays():
+    from repro.core.structure import attach_sorted_runs
+    graphs = [random_binary_tree(5, np.random.default_rng(0)), chain(4)]
+    fwd = pack_batch(graphs, with_runs=False)
+    full = pack_batch(graphs, with_runs=True)
+    assert fwd.sort_perm is None and fwd.sorted_child_ids is None \
+        and fwd.run_head is None
+    assert full.sort_perm is not None
+    # attach is exactly the deferred precompute (and is idempotent)
+    attached = attach_sorted_runs(fwd)
+    np.testing.assert_array_equal(attached.sort_perm, full.sort_perm)
+    np.testing.assert_array_equal(attached.sorted_child_ids,
+                                  full.sorted_child_ids)
+    np.testing.assert_array_equal(attached.run_head, full.run_head)
+    assert attach_sorted_runs(attached) is attached
+    # the non-run fields are unaffected by lazy packing
+    np.testing.assert_array_equal(fwd.child_ids, full.child_ids)
+    np.testing.assert_array_equal(fwd.node_mask, full.node_mask)
+
+
+def test_cache_upgrades_runsless_entry_in_place():
+    """A forward-only (serving) lookup populates the cache without run
+    arrays; a later training-path lookup of the SAME key upgrades the
+    entry (and rebuilds the device twin) instead of re-packing."""
+    graphs = [random_binary_tree(4, np.random.default_rng(1))]
+    c = ScheduleCache(enabled=True, persist=False)
+    s1, d1 = c.get_or_pack_device(graphs, with_runs=False)
+    assert s1.sort_perm is None and d1.sort_perm is None
+    assert c.packs == 1
+    s2, d2 = c.get_or_pack_device(graphs, with_runs=True)
+    assert c.packs == 1 and c.hits == 1     # upgraded, not re-packed
+    assert s2.sort_perm is not None and d2.sort_perm is not None
+    ref = pack_batch(graphs, with_runs=True)
+    np.testing.assert_array_equal(s2.sort_perm, ref.sort_perm)
+    # a with_runs=False hit on the upgraded entry keeps the runs (the
+    # cache never downgrades — sharing serving+training cache is sound)
+    s3, _ = c.get_or_pack_device(graphs, with_runs=False)
+    assert s3.sort_perm is not None
+
+
+def test_disk_tier_upgrades_forward_only_entry(tmp_path):
+    """A store populated by a serving pipeline (forward-only entries)
+    still serves a training-path lookup: runs are attached on load, and
+    the smaller entry stays on disk (no write-back)."""
+    graphs = [chain(5), random_binary_tree(3, np.random.default_rng(2))]
+    serve_cache = ScheduleCache(enabled=True, persist=tmp_path)
+    serve_cache.get_or_pack(graphs, with_runs=False)
+    size_before = serve_cache.persist.size_bytes()
+    train_cache = ScheduleCache(enabled=True, persist=tmp_path)
+    s = train_cache.get_or_pack(graphs, with_runs=True)
+    assert train_cache.disk_hits == 1 and train_cache.packs == 0
+    assert s.sort_perm is not None
+    ref = pack_batch(graphs, with_runs=True)
+    np.testing.assert_array_equal(s.sort_perm, ref.sort_perm)
+    assert train_cache.persist.size_bytes() == size_before
+
+
+def test_forward_only_entries_are_smaller(tmp_path):
+    from repro.pipeline.persist import _encode
+    graphs = [random_binary_tree(8, np.random.default_rng(3))
+              for _ in range(4)]
+    full = len(_encode(pack_batch(graphs, with_runs=True)))
+    fwd = len(_encode(pack_batch(graphs, with_runs=False)))
+    assert fwd < full * 0.7                # the ROADMAP hygiene win
+
+
+def test_serve_engine_pipeline_packs_without_runs():
+    """StructureServeEngine's default pipeline is forward-only: the
+    schedules it caches carry no run arrays, and scoring still matches
+    the training-path execute (existing parity tests)."""
+    fn = TreeLSTMVertex(input_dim=INPUT_DIM, hidden=4, arity=2)
+    params = fn.init(jax.random.PRNGKey(0))
+    eng = StructureServeEngine(fn, params)
+    assert eng.pipeline.with_runs is False
+    g = random_binary_tree(3, np.random.default_rng(4))
+    x = np.random.default_rng(4).standard_normal(
+        (g.num_nodes, INPUT_DIM)).astype(np.float32)
+    req = StructureRequest(0, g, x)
+    eng.submit(req)
+    eng.run()
+    assert req.status == "ok"
+    sched = eng.pipeline.cache.get_or_pack([g], eng.pipeline.pads_for([g]),
+                                           with_runs=False)
+    assert sched.sort_perm is None

@@ -109,6 +109,101 @@ def test_failure_injection_recovers(tmp_path):
     assert logger.history[-1]["loss"] < 0.3
 
 
+def test_failure_before_first_checkpoint_reinits_params(tmp_path):
+    """A crash BEFORE the first checkpoint commit must restart from a
+    fresh init (the recorded init rng), not from the zeroed restore
+    twin.  Uses a non-zero init so the two are distinguishable, and
+    ckpt_every > steps so nothing is ever committed mid-run."""
+    rng = np.random.default_rng(3)
+    w_true = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    w_init = rng.standard_normal((8, 4)).astype(np.float32)
+
+    def init_params(key):
+        # fresh device array per call — the previous one may have been
+        # donated to the jitted step and deleted
+        return {"w": jnp.asarray(w_init)}
+
+    def loss_fn(p, batch):
+        l = jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+        return l, {"mse": l}
+
+    def batches(seed=0):
+        r = np.random.default_rng(seed)
+        while True:
+            x = jnp.asarray(r.standard_normal((16, 8)), jnp.float32)
+            yield {"x": x, "y": x @ w_true}
+
+    def fit(ckpt_dir, fail_at, skip_first=False):
+        tr = Trainer(loss_fn, init_params,
+                     TrainConfig(lr=0.05, warmup_steps=5, total_steps=12,
+                                 weight_decay=0.0, ckpt_dir=ckpt_dir,
+                                 ckpt_every=100,     # > steps: no commit
+                                 log_every=100))
+        state = tr.init_state(jax.random.PRNGKey(0))
+        inj = FaultInjector(fail_at_steps=fail_at) if fail_at else None
+        stream = batches()
+        if skip_first:
+            next(stream)
+        state, _ = tr.fit(state, stream, steps=12, fault_injector=inj)
+        return np.asarray(state.params["w"])
+
+    # The crash consumes batch 0 before the injector fires, so the
+    # faithful fault-free reference is a run over batches 1..12.
+    clean = fit(str(tmp_path / "clean"), None, skip_first=True)
+    crashed = fit(str(tmp_path / "crash0"), [0])
+    # re-init from the recorded rng + same batches ⇒ identical params
+    np.testing.assert_array_equal(clean, crashed)
+    # and it must NOT be the zeros trajectory the old code produced
+    assert not np.allclose(crashed, 0.0)
+
+
+def test_nonfinite_batch_skips_step_and_counts():
+    """A NaN batch must not touch params/moments: the jitted guard
+    drops the batch, the host counts the skip, and training continues
+    to converge on the surviving batches."""
+    init, loss_fn, batches = make_problem()
+
+    def poisoned(seed=0):
+        for i, b in enumerate(batches(seed)):
+            if i == 3:
+                bad = dict(b)
+                bad["x"] = b["x"].at[0, 0].set(jnp.nan)
+                yield bad
+            else:
+                yield b
+
+    tr = Trainer(loss_fn, init,
+                 TrainConfig(lr=0.05, warmup_steps=5, total_steps=60,
+                             weight_decay=0.0, log_every=1))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    logger = MetricLogger(log_fn=lambda *_: None)
+    state, logger = tr.fit(state, poisoned(), steps=60, logger=logger)
+    assert logger.counters["nonfinite_skips"] == 1
+    assert int(np.asarray(state.step)) == 60
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+    assert logger.history[-1]["loss"] < 0.05 * logger.history[0]["loss"]
+
+
+def test_nonfinite_streak_aborts():
+    """Persistent divergence is a bug, not weather: more than
+    max_skip_steps consecutive non-finite steps aborts the run."""
+    init, loss_fn, batches = make_problem()
+
+    def all_nan(seed=0):
+        for b in batches(seed):
+            yield {"x": b["x"] * jnp.nan, "y": b["y"]}
+
+    tr = Trainer(loss_fn, init,
+                 TrainConfig(lr=0.05, warmup_steps=5, total_steps=60,
+                             weight_decay=0.0, log_every=100,
+                             max_skip_steps=4))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    logger = MetricLogger(log_fn=lambda *_: None)
+    with pytest.raises(RuntimeError, match="consecutive non-finite"):
+        tr.fit(state, all_nan(), steps=60, logger=logger)
+    assert logger.counters["nonfinite_skips"] == 5
+
+
 def test_compressed_grads_still_converge():
     init, loss_fn, batches = make_problem()
     tr = Trainer(loss_fn, init,
