@@ -1,0 +1,206 @@
+"""Serving under load (beyond-paper): continuous union-frontier
+batching vs request-granularity flushing.
+
+A seeded Poisson arrival trace of variable-length chain requests is
+replayed in real time against both serving paths:
+
+  - **baseline** — :class:`StructureServeEngine`: each flush packs the
+    queued requests into one depth-padded batch and scores it whole
+    (request-granularity batching: admission only at flush boundaries,
+    every member padded to the deepest co-batched graph);
+  - **continuous** — :class:`ContinuousBatchEngine`: one live frontier
+    over all in-flight graphs, mid-flight admission into freed arena
+    rows, multi-tick dispatch windows, per-topology plan-cache reuse.
+
+Reported per path: p50/p99 end-to-end latency (submit → terminal) and
+completed-request throughput over the trace makespan.  With
+``--assert-parity`` the continuous results are additionally checked
+BIT-IDENTICAL to scoring every request alone — the smoke-CI gate that
+the throughput win never comes from changed numerics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Collector
+from repro.core.structure import chain
+from repro.models.rnn import LSTMVertex
+from repro.serve import (AdmissionPolicy, ContinuousBatchEngine,
+                         ContinuousRequest, StructureRequest,
+                         StructureServeEngine)
+
+
+def _poisson_trace(seed: int, n: int, rate_hz: float, lengths):
+    """Seeded Poisson arrivals: (arrival_s, chain_len) per request."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    arrivals = np.cumsum(gaps)
+    lens = rng.choice(np.asarray(lengths), size=n)
+    return arrivals, lens, rng
+
+
+def _make_requests(cls, arrivals, lens, rng, input_dim):
+    reqs = []
+    for i, L in enumerate(lens):
+        x = rng.standard_normal((int(L), input_dim)).astype(np.float32) * 0.3
+        reqs.append(cls(request_id=i, graph=chain(int(L)), inputs=x))
+    return reqs
+
+
+def _replay(engine, reqs, arrivals, max_wall_s: float = 300.0):
+    """Replay the trace in real time: submit each request at its arrival
+    offset, stepping the engine in between.  Returns (latencies_s,
+    makespan_s) over completed requests."""
+    n = len(reqs)
+    t0 = time.monotonic()
+    i = 0
+    while True:
+        now = time.monotonic() - t0
+        while i < n and arrivals[i] <= now:
+            engine.submit(reqs[i])
+            i += 1
+        live = engine.step()
+        if i >= n and live == 0:
+            break
+        if live == 0 and i < n:
+            time.sleep(min(0.001, max(0.0, arrivals[i] - (time.monotonic()
+                                                          - t0))))
+        if time.monotonic() - t0 > max_wall_s:
+            raise RuntimeError("trace replay exceeded wall budget")
+    makespan = time.monotonic() - t0
+    lats = [r._finished_at - r._enqueued_at for r in reqs
+            if r.status == "ok"]
+    n_ok = sum(r.status == "ok" for r in reqs)
+    assert n_ok == n, f"only {n_ok}/{n} requests completed ok"
+    return np.asarray(lats), makespan
+
+
+def _warm(engine_factory, reqs_factory, k: int = 6):
+    """Compile-warm a fresh engine on a tiny preamble so the measured
+    replay sees steady-state (bucketed shapes already traced)."""
+    eng = engine_factory()
+    for r in reqs_factory(k):
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+def _assert_parity(fn, params, reqs, fusion_mode: str) -> None:
+    """Every continuous result must be bitwise the solo score."""
+    solo = StructureServeEngine(fn, params, batch_size=1, compose=False,
+                                fusion_mode=fusion_mode)
+    checks = [StructureRequest(r.request_id, r.graph, r.inputs)
+              for r in reqs]
+    for c in checks:
+        assert solo.submit(c), c.error
+    solo.run()
+    for r, c in zip(reqs, checks):
+        assert c.status == "ok", (c.status, c.error)
+        if not np.array_equal(r.root_state, c.root_state):
+            raise AssertionError(
+                f"parity violation: request {r.request_id} continuous "
+                f"root != solo root (mode={fusion_mode})")
+
+
+def main(argv=None) -> Collector:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized single config (default when not --full)")
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="fail unless continuous results are bit-identical "
+                         "to solo scoring")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    col = Collector()
+    if args.full:
+        n, rate = 400, 300.0
+        hidden, input_dim = 96, 48
+    else:
+        n, rate = 120, 250.0
+        hidden, input_dim = 64, 32
+    lengths = (4, 6, 8, 12, 16, 24, 32)
+    batch_size = 16
+
+    fn = LSTMVertex(input_dim=input_dim, hidden=hidden)
+    params = fn.init(jax.random.PRNGKey(0))
+    fusion_mode = "auto"
+
+    arrivals, lens, rng = _poisson_trace(args.seed, n, rate, lengths)
+
+    def baseline_factory():
+        return StructureServeEngine(fn, params, batch_size=batch_size,
+                                    fusion_mode=fusion_mode)
+
+    def continuous_factory():
+        return ContinuousBatchEngine(
+            fn, params, num_rows=1024, frontier_width=64,
+            fusion_mode=fusion_mode,
+            policy=AdmissionPolicy(min_occupancy=0.0, max_window=8))
+
+    def warm_reqs_struct(k):
+        g = np.random.default_rng(99)
+        return [StructureRequest(1000 + j, chain(int(L)),
+                                 g.standard_normal((int(L), input_dim))
+                                 .astype(np.float32))
+                for j, L in enumerate(list(lengths)[:k])]
+
+    def warm_reqs_cont(k):
+        g = np.random.default_rng(99)
+        return [ContinuousRequest(1000 + j, chain(int(L)),
+                                  g.standard_normal((int(L), input_dim))
+                                  .astype(np.float32))
+                for j, L in enumerate(list(lengths)[:k])]
+
+    results = {}
+    for name, factory, cls, warm_reqs in (
+            ("baseline", baseline_factory, StructureRequest,
+             warm_reqs_struct),
+            ("continuous", continuous_factory, ContinuousRequest,
+             warm_reqs_cont)):
+        eng = _warm(factory, warm_reqs, k=len(lengths))
+        reqs = _make_requests(cls, arrivals, lens,
+                              np.random.default_rng(args.seed + 1),
+                              input_dim)
+        lats, makespan = _replay(eng, reqs, arrivals)
+        p50 = float(np.percentile(lats, 50) * 1e3)
+        p99 = float(np.percentile(lats, 99) * 1e3)
+        thr = len(lats) / makespan
+        det = (f"n={n} rate={rate}/s lens={min(lengths)}-{max(lengths)} "
+               f"h={hidden}")
+        col.add(f"serving/{name}_p50_latency", p50, "ms", det)
+        col.add(f"serving/{name}_p99_latency", p99, "ms", det)
+        col.add(f"serving/{name}_throughput", thr, "req/s", det)
+        results[name] = {"p50": p50, "p99": p99, "thr": thr,
+                         "reqs": reqs, "eng": eng}
+
+    gain = results["continuous"]["thr"] / results["baseline"]["thr"]
+    p99_ratio = results["continuous"]["p99"] / results["baseline"]["p99"]
+    col.add("serving/continuous_throughput_gain", gain, "x",
+            "continuous vs request-granularity flushing, same trace")
+    col.add("serving/continuous_p99_ratio", p99_ratio, "x",
+            "continuous p99 / baseline p99 (<= 1 is better-or-equal)")
+    h = results["continuous"]["eng"].health()
+    col.add("serving/continuous_plan_hit_rate",
+            h["plan_hits"] / max(1, h["plan_hits"] + h["plan_misses"]),
+            "frac", f"windows={h['windows']} ticks={h['ticks']}")
+
+    if args.assert_parity:
+        _assert_parity(fn, params, results["continuous"]["reqs"],
+                       fusion_mode)
+        col.add("serving/parity_bit_identical", 1.0, "bool",
+                "every continuous root bitwise equals solo scoring")
+
+    return col
+
+
+if __name__ == "__main__":
+    c = main()
+    for rec in c.records:
+        print(",".join(str(rec[k]) for k in ("name", "value", "unit")))

@@ -21,8 +21,8 @@ import traceback
 
 from benchmarks import (bench_ablation, bench_fixed_lstm,
                         bench_graph_construction, bench_memory,
-                        bench_roofline, bench_tree_fc, bench_tree_lstm,
-                        bench_var_lstm)
+                        bench_roofline, bench_serving, bench_tree_fc,
+                        bench_tree_lstm, bench_var_lstm)
 
 SUITES = [
     ("fixed_lstm (Fig 8a/e)", bench_fixed_lstm),
@@ -33,6 +33,7 @@ SUITES = [
     ("memory (Tab 2)", bench_memory),
     ("ablation (Fig 10)", bench_ablation),
     ("roofline (beyond-paper)", bench_roofline),
+    ("serving (beyond-paper)", bench_serving),
 ]
 
 

@@ -474,6 +474,50 @@ _execute_lazy_opbyop.defvjp(_lazy_fwd, _lazy_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Union-frontier execution (continuous cross-request batching)
+# ---------------------------------------------------------------------------
+
+def frontier_step(fn: VertexFunction, params: Params, buf: Array,
+                  child_ids: Array, child_mask: Array, ext_rows: Array,
+                  node_mask: Array, out_ids: Array, *,
+                  spec: Optional[GateSpec] = None) -> Array:
+    """One batching task over a mixed-depth UNION frontier.
+
+    The continuous serving engine schedules ready vertices of MANY
+    in-flight graphs into one frontier: row ``m`` gathers its children
+    from arbitrary arena rows (``child_ids``), pulls its pre-gathered
+    external row (``ext_rows[m]`` — already eagerly projected for
+    GateSpec cells), and scatters its state to its own arena row
+    ``out_ids[m]`` instead of a contiguous level block.  Per-request
+    level offsets are therefore pure data resolved host-side — the
+    compiled program never changes as requests come and go (the Cavs
+    property, extended across requests).
+
+    With ``spec`` the row math routes through the fused frontier
+    megastep (``kops.frontier_megastep``); without it the op-by-op
+    gather → apply → scatter.  Both legs compute bit-identical rows to
+    what :func:`execute` computes for the same vertex on the matching
+    leg, which is what lets the engine prove per-request bit-identity
+    against solo scoring.
+
+    Pad lanes: ``node_mask`` 0, ``child_ids`` at the buffer sentinel,
+    ``out_ids`` out of range (unique; the scatter drops them).
+    """
+    if spec is not None:
+        return kops.frontier_megastep(spec.kind, buf, child_ids, child_mask,
+                                      ext_rows, node_mask, out_ids,
+                                      spec.weights(params))
+    M, A = child_ids.shape
+    S = buf.shape[1]
+    ch = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
+    io = VertexIO(child_states=ch, child_mask=child_mask.astype(buf.dtype),
+                  external=ext_rows, node_mask=node_mask.astype(buf.dtype))
+    out = fn.apply(params, io)
+    state = (out.state * io.node_mask[:, None]).astype(buf.dtype)
+    return kops.scatter_rows(buf, out_ids, state)
+
+
+# ---------------------------------------------------------------------------
 # Readouts (lazy `push`: external consumers read the buffer after the scan)
 # ---------------------------------------------------------------------------
 

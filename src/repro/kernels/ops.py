@@ -116,6 +116,44 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
                               node_mask, offset, ext, weights)
 
 
+def frontier_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
+                      child_mask: jax.Array, rows: jax.Array,
+                      node_mask: jax.Array, out_ids: jax.Array,
+                      weights: Tuple[jax.Array, ...],
+                      impl: str = "auto") -> jax.Array:
+    """One batching task over a mixed-depth UNION frontier (continuous
+    serving): gather child rows from arbitrary arena rows of ``buf``,
+    run the declared gate math, scatter the masked states to the
+    per-row destinations ``out_ids`` (unique; out-of-range = pad lane,
+    dropped).  ``rows`` are the pre-gathered (eagerly projected) pulled
+    rows ``[M, G]`` — per-request level offsets are resolved host-side
+    by the engine, so the compiled program never changes.
+
+    The pallas backend composes the two validated launches: the level
+    megastep computes the frontier's states into a contiguous staging
+    block appended past the buffer, then the scatter kernel routes them
+    to their arena rows — two launches per tick (vs one for the
+    depth-aligned path), the price of non-contiguous destinations.  The
+    fallback is the jnp oracle (same row math as ``ref.level_megastep``
+    — the bit-identity anchor for the continuous engine).
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "pallas":
+        M = child_ids.shape[0]
+        S = buf.shape[1]
+        ncap = buf.shape[0]
+        staged = jnp.concatenate([buf, jnp.zeros((M, S), buf.dtype)], axis=0)
+        ext_ids = jnp.arange(M, dtype=jnp.int32)
+        staged = level_megastep(kind, staged, child_ids, child_mask,
+                                ext_ids, node_mask, ncap, rows, weights,
+                                impl="pallas")
+        states = jax.lax.dynamic_slice(staged, (ncap, 0), (M, S))
+        return gsc.scatter_rows(buf, out_ids, states,
+                                interpret=_interpret())
+    return ref.frontier_megastep(kind, buf, child_ids, child_mask, rows,
+                                 node_mask, out_ids, weights)
+
+
 def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
                  child_ids: jax.Array, child_mask: jax.Array,
                  ext_ids: jax.Array, node_mask: jax.Array,

@@ -329,6 +329,34 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
         buf, (state * nm).astype(buf.dtype), (offset, 0))
 
 
+def frontier_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
+                      child_mask: jax.Array, rows: jax.Array,
+                      node_mask: jax.Array, out_ids: jax.Array,
+                      weights: Tuple[jax.Array, ...]) -> jax.Array:
+    """Oracle for the continuous-serving UNION-frontier batching task.
+
+    Like :func:`level_megastep` but the frontier mixes vertices of many
+    in-flight graphs at different depths, so destinations are arbitrary
+    per-row buffer indices ``out_ids`` (each request's rows live at its
+    own arena offset) instead of a contiguous block, and the pulled
+    rows arrive pre-gathered as ``rows`` ``[M, G]`` (the engine
+    assembles them host-side from per-request external matrices — there
+    is no single ``[R+1, X]`` matrix spanning the frontier).
+
+    ``out_ids`` must be unique; pad lanes carry out-of-range ids (the
+    scatter drops them) and ``node_mask`` 0.  The row math is exactly
+    :func:`megastep_cell_state`, which is what makes frontier execution
+    bit-identical per row to the aligned level scan.
+    """
+    M, A = child_ids.shape
+    S = buf.shape[1]
+    child = jnp.take(buf, child_ids.reshape(-1), axis=0).reshape(M, A, S)
+    nm = node_mask.astype(buf.dtype)[:, None]
+    state = megastep_cell_state(kind, child, rows,
+                                child_mask.astype(buf.dtype), weights)
+    return scatter_rows(buf, out_ids, (state * nm).astype(buf.dtype))
+
+
 def level_bwd(kind: str, g_state: jax.Array, child: jax.Array,
               rows: jax.Array, child_mask: jax.Array,
               weights: Tuple[jax.Array, ...]

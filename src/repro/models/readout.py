@@ -1,0 +1,195 @@
+"""Readout heads: the lazy ``push`` consumers of the node-state buffer.
+
+Cavs collects outputs lazily (§3.5): the scheduler fills the node-state
+buffer, and everything downstream — classification over root states,
+regression, next-token logits — reads it *after* the sequential region,
+batched over however many roots retired together.  These heads are that
+downstream: small pure modules the serving engines call at retirement
+time (``serve/continuous.py`` retires finished roots straight into
+them) and training loops call on ``readout_roots`` output.
+
+Three heads plus the numerics they share:
+
+  - :class:`ClassificationHead` — root state → class logits, with the
+    numerically-stable batched softmax/log-softmax below and a mean-NLL
+    loss (the Tree-LSTM sentiment setup, paper §5.2);
+  - :class:`RegressionHead` — root state → real-valued outputs, MSE;
+  - :class:`TokenReadout` — root state → token logits plus a
+    *sampled-feedback generation loop*: sample a token, embed it, and
+    advance the SAME arity-1 vertex cell one step (the decode analogue
+    of the Var-LSTM experiment), so serving emits tokens rather than
+    raw states.  Sampling is keyed by an explicit rng the caller folds
+    per request — generation is deterministic for a given
+    ``(params, state, rng)`` no matter how requests interleave.
+
+All heads are frozen dataclasses with explicit ``init``/pure applies,
+matching the vertex-cell convention in ``models/rnn.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex import apply_unbatched, has_eager_projection
+from repro.models.layers import dense_init as _dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Stable batched softmax (shared numerics)
+# ---------------------------------------------------------------------------
+
+def batched_log_softmax(logits: jax.Array, axis: int = -1) -> jax.Array:
+    """Max-subtracted log-softmax: finite for logits up to float32 max
+    (``exp`` sees only values ≤ 0), the retirement-path requirement —
+    a blown-up root state must produce a bad *score*, not a NaN that
+    trips the engine's non-finite guard."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=axis, keepdims=True))
+    shifted = logits - m
+    return shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=axis,
+                                     keepdims=True))
+
+
+def batched_softmax(logits: jax.Array, axis: int = -1) -> jax.Array:
+    """Max-subtracted softmax over a batch of logit rows."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=axis, keepdims=True))
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Classification / regression heads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassificationHead:
+    """Linear head over root states: ``[K, S] → [K, num_classes]``."""
+
+    state_dim: int
+    num_classes: int
+
+    def init(self, rng: jax.Array) -> Params:
+        return {"w": _dense_init(rng, self.state_dim, self.num_classes),
+                "b": jnp.zeros((self.num_classes,), jnp.float32)}
+
+    def logits(self, params: Params, roots: jax.Array) -> jax.Array:
+        return roots @ params["w"] + params["b"]
+
+    def log_probs(self, params: Params, roots: jax.Array) -> jax.Array:
+        return batched_log_softmax(self.logits(params, roots))
+
+    def probs(self, params: Params, roots: jax.Array) -> jax.Array:
+        return batched_softmax(self.logits(params, roots))
+
+    def predict(self, params: Params, roots: jax.Array) -> jax.Array:
+        return jnp.argmax(self.logits(params, roots), axis=-1)
+
+    def loss(self, params: Params, roots: jax.Array,
+             labels: jax.Array) -> jax.Array:
+        lp = self.log_probs(params, roots)
+        return -jnp.mean(jnp.take_along_axis(lp, labels[:, None],
+                                             axis=-1)[:, 0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressionHead:
+    """Linear regression head over root states: ``[K, S] → [K, out_dim]``."""
+
+    state_dim: int
+    out_dim: int = 1
+
+    def init(self, rng: jax.Array) -> Params:
+        return {"w": _dense_init(rng, self.state_dim, self.out_dim),
+                "b": jnp.zeros((self.out_dim,), jnp.float32)}
+
+    def predict(self, params: Params, roots: jax.Array) -> jax.Array:
+        return roots @ params["w"] + params["b"]
+
+    def loss(self, params: Params, roots: jax.Array,
+             targets: jax.Array) -> jax.Array:
+        d = self.predict(params, roots) - targets
+        return jnp.mean(d * d)
+
+
+# ---------------------------------------------------------------------------
+# Token readout: sampled-feedback generation through the vertex cell
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _gen_step(cell, head_params: Params, cell_params: Params,
+              state: jax.Array, key: jax.Array):
+    """One sampled-feedback step: state → logits → sampled token →
+    embed → one arity-1 cell application (jitted once per cell; the
+    loop around it is host-side data)."""
+    logits = state @ head_params["w"] + head_params["b"]
+    tok = jax.random.categorical(key, logits).astype(jnp.int32)
+    raw = jnp.take(head_params["embed"], tok, axis=0)
+    ext = raw
+    if has_eager_projection(cell):
+        ext = cell.project_inputs(cell_params, raw[None])[0]
+    out = apply_unbatched(cell, cell_params, state[None, :],
+                          jnp.ones((1,), state.dtype), ext)
+    return tok, out.state
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenReadout:
+    """Next-token head + generation loop over an arity-1 vertex cell.
+
+    ``cell`` is the SAME vertex function that scored the structure (its
+    state feeds straight back in — no re-encode), ``vocab`` the output
+    vocabulary.  ``generate`` runs the sampled-feedback loop: logits
+    from the current state, categorical sample keyed by
+    ``fold_in(rng, step)``, embed, one cell step; stops at ``eos_id``
+    or ``max_tokens``.
+    """
+
+    cell: Any                        # arity-1 VertexFunction
+    vocab: int
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if getattr(self.cell, "arity", None) != 1:
+            raise ValueError(
+                f"TokenReadout feeds sampled tokens back through an "
+                f"arity-1 cell; {type(self.cell).__name__} has arity "
+                f"{getattr(self.cell, 'arity', None)}")
+
+    def init(self, rng: jax.Array) -> Params:
+        kw, ke = jax.random.split(rng)
+        return {"w": _dense_init(kw, self.cell.state_dim, self.vocab),
+                "b": jnp.zeros((self.vocab,), jnp.float32),
+                "embed": _dense_init(ke, self.vocab, self.cell.input_dim)}
+
+    def logits(self, params: Params, states: jax.Array) -> jax.Array:
+        """Batched next-token logits: ``[K, S] → [K, vocab]``."""
+        return states @ params["w"] + params["b"]
+
+    def generate(self, params: Params, cell_params: Params,
+                 state: jax.Array, rng: jax.Array, *,
+                 max_tokens: int = 16,
+                 eos_id: Optional[int] = None) -> List[int]:
+        """Sample up to ``max_tokens`` tokens from ``state``.
+
+        Deterministic in ``(params, cell_params, state, rng)``: step t
+        uses ``fold_in(rng, t)``, so a caller that derives ``rng`` per
+        request (``fold_in(base, request_id)``) gets the same tokens
+        regardless of batching or admission order.
+        """
+        eos = self.eos_id if eos_id is None else eos_id
+        state = jnp.asarray(state, jnp.float32)
+        toks: List[int] = []
+        for t in range(max_tokens):
+            tok, state = _gen_step(self.cell, params, cell_params, state,
+                                   jax.random.fold_in(rng, t))
+            tok = int(tok)
+            toks.append(tok)
+            if eos is not None and tok == eos:
+                break
+        return toks

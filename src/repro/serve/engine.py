@@ -381,10 +381,13 @@ class VertexServeEngine(_EngineBase):
         """Admit + advance every active slot one vertex.  Returns live
         requests (active + queued) after the tick."""
         self.lifecycle.sweep_deadlines()
+        expired_slots = []
         for m, req in enumerate(self._slot_req):
             if req is not None and self.lifecycle.expired(req):
                 self.lifecycle.finish_timeout(req)
                 self._slot_req[m] = None
+                expired_slots.append(m)
+        self._zero_slot_rows(expired_slots)
         for m in range(self.num_slots):
             if self._slot_req[m] is None and self.queue:
                 req = self.queue.pop(0)
@@ -419,10 +422,13 @@ class VertexServeEngine(_EngineBase):
             # (the buffer was not advanced), so every in-flight request
             # reaches the ``failed`` terminal — queued requests are
             # untouched and will be admitted next tick.
+            failed_slots = []
             for m, req in enumerate(self._slot_req):
                 if req is not None:
                     self.lifecycle.finish_failed(req, f"tick failed: {e}")
                     self._slot_req[m] = None
+                    failed_slots.append(m)
+            self._zero_slot_rows(failed_slots)
             return self.num_active + len(self.queue)
         self._parity = 1 - self._parity
         self.ticks += 1
@@ -439,6 +445,19 @@ class VertexServeEngine(_EngineBase):
                 self.lifecycle.finish_ok(req)
                 self._slot_req[m] = None
         return self.num_active + len(self.queue)
+
+    def _zero_slot_rows(self, slots: List[int]) -> None:
+        """Re-zero BOTH ping-pong rows of slots freed by a timeout or a
+        failed tick.  A fresh admission gathers the zero sentinel at
+        position 0, so correctness never reads the stale rows — but a
+        dead request's states must not linger in the pool (leak hygiene,
+        and the invariant the regression test pins: a freed slot's rows
+        are exactly zero before reuse)."""
+        if not slots:
+            return
+        M = self.num_slots
+        rows = np.asarray([m for s in slots for m in (s, M + s)], np.int32)
+        self._buf = self._buf.at[jnp.asarray(rows)].set(0.0)
 
     def _run_tick(self, args: Tuple) -> jax.Array:
         """One tick through the degradation ladder: fused megastep

@@ -156,12 +156,14 @@ class RequestLifecycle:
         req.status = status
         req.error = error
         req.done = True
+        req._finished_at = self.clock()   # latency = this - _enqueued_at
         self.finished.append(req)
 
     def finish_ok(self, req: Any) -> None:
         req.status = OK
         req.error = None
         req.done = True
+        req._finished_at = self.clock()
         self.completed += 1
         self.finished.append(req)
 

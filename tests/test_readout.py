@@ -1,0 +1,173 @@
+"""Readout heads (models/readout.py): forward/grad parity against pure
+jnp oracles, numerical stability of the batched softmax at extreme
+logits, and determinism of the sampled-feedback generation loop."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.readout import (ClassificationHead, RegressionHead,
+                                  TokenReadout, batched_log_softmax,
+                                  batched_softmax)
+from repro.models.rnn import GRUVertex, LSTMVertex
+from repro.models.treelstm import TreeLSTMVertex
+
+
+def _roots(rng, k, s):
+    return jnp.asarray(rng.standard_normal((k, s)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Classification / regression: forward + grad parity vs pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+def test_classification_forward_and_grad_match_oracle():
+    head = ClassificationHead(state_dim=6, num_classes=4)
+    params = head.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    roots = _roots(rng, 5, 6)
+    labels = jnp.asarray(rng.integers(0, 4, 5).astype(np.int32))
+
+    def oracle_loss(p):
+        logits = roots @ p["w"] + p["b"]
+        z = logits - jnp.max(logits, axis=-1, keepdims=True)
+        lp = z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+        return -jnp.mean(lp[jnp.arange(5), labels])
+
+    np.testing.assert_allclose(
+        np.asarray(head.logits(params, roots)),
+        np.asarray(roots @ params["w"] + params["b"]), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(head.loss(params, roots, labels)),
+        float(oracle_loss(params)), rtol=1e-6)
+    got = jax.grad(lambda p: head.loss(p, roots, labels))(params)
+    want = jax.grad(oracle_loss)(params)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+    # probs/log_probs/predict agree with each other
+    np.testing.assert_allclose(
+        np.asarray(head.probs(params, roots)),
+        np.asarray(jnp.exp(head.log_probs(params, roots))),
+        rtol=1e-5, atol=1e-7)
+    assert np.array_equal(
+        np.asarray(head.predict(params, roots)),
+        np.argmax(np.asarray(head.logits(params, roots)), axis=-1))
+
+
+def test_regression_forward_and_grad_match_oracle():
+    head = RegressionHead(state_dim=5, out_dim=2)
+    params = head.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    roots = _roots(rng, 7, 5)
+    targets = jnp.asarray(rng.standard_normal((7, 2)).astype(np.float32))
+
+    def oracle(p):
+        d = roots @ p["w"] + p["b"] - targets
+        return jnp.mean(d * d)
+
+    np.testing.assert_allclose(float(head.loss(params, roots, targets)),
+                               float(oracle(params)), rtol=1e-6)
+    got = jax.grad(lambda p: head.loss(p, roots, targets))(params)
+    want = jax.grad(oracle)(params)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched softmax: numerically stable at extreme logits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scale", [1e4, 3e4, -1e4])
+def test_batched_softmax_stable_at_large_logits(scale):
+    """Naive softmax overflows exp() around logits ~88; the
+    max-subtracted version must stay finite and normalized far past
+    that (the retirement-path requirement: a blown-up root produces a
+    bad score, never a NaN)."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(
+        rng.standard_normal((4, 6)).astype(np.float32) + np.float32(scale))
+    p = np.asarray(batched_softmax(logits))
+    lp = np.asarray(batched_log_softmax(logits))
+    assert np.isfinite(p).all() and np.isfinite(lp).all()
+    np.testing.assert_allclose(p.sum(axis=-1), np.ones(4), rtol=1e-5)
+    assert (lp <= 0).all()
+    # and the naive version would indeed have been inf/NaN up there:
+    if scale > 0:
+        with np.errstate(over="ignore"):
+            assert not np.isfinite(np.exp(np.asarray(logits))).all()
+
+
+def test_batched_softmax_mixed_extreme_rows():
+    logits = jnp.asarray(np.array(
+        [[1e4, -1e4, 0.0], [88.0, 89.0, 90.0], [0.1, 0.2, 0.3]],
+        np.float32))
+    p = np.asarray(batched_softmax(logits))
+    assert np.isfinite(p).all()
+    np.testing.assert_allclose(p.sum(-1), np.ones(3), rtol=1e-5)
+    assert p[0, 0] > 0.999                # the dominant logit wins
+
+
+# ---------------------------------------------------------------------------
+# Token readout: sampled-feedback generation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell_cls", [LSTMVertex, GRUVertex])
+def test_generation_deterministic_under_fixed_rng(cell_cls):
+    cell = cell_cls(input_dim=5, hidden=4)
+    cp = cell.init(jax.random.PRNGKey(2))
+    tr = TokenReadout(cell, vocab=17)
+    tp = tr.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    state = rng.standard_normal(cell.state_dim).astype(np.float32)
+
+    key = jax.random.PRNGKey(11)
+    runs = [tr.generate(tp, cp, state, key, max_tokens=8)
+            for _ in range(3)]
+    assert runs[0] == runs[1] == runs[2]
+    assert len(runs[0]) == 8
+    assert all(0 <= t < 17 for t in runs[0])
+    # a different key gives a different trajectory (overwhelmingly)
+    other = tr.generate(tp, cp, state, jax.random.PRNGKey(12),
+                        max_tokens=8)
+    assert other != runs[0]
+
+
+def test_generation_stops_at_eos():
+    cell = LSTMVertex(input_dim=5, hidden=4)
+    cp = cell.init(jax.random.PRNGKey(4))
+    tr = TokenReadout(cell, vocab=9)
+    tp = tr.init(jax.random.PRNGKey(5))
+    rng = np.random.default_rng(4)
+    state = rng.standard_normal(cell.state_dim).astype(np.float32)
+    free = tr.generate(tp, cp, state, jax.random.PRNGKey(0), max_tokens=12)
+    eos = free[3]                         # force an EOS we know appears
+    stopped = tr.generate(tp, cp, state, jax.random.PRNGKey(0),
+                          max_tokens=12, eos_id=eos)
+    assert stopped == free[: free.index(eos) + 1]
+    assert stopped[-1] == eos
+
+
+def test_token_readout_rejects_tree_cells():
+    tree = TreeLSTMVertex(input_dim=4, hidden=3, arity=2)
+    with pytest.raises(ValueError, match="arity"):
+        TokenReadout(tree, vocab=5)
+
+
+def test_batched_logits_match_per_row():
+    """The batched next-token logits are row-stable — logits of a state
+    batched with co-tenants are bitwise its solo logits (what lets the
+    continuous engine retire through one batched head call)."""
+    cell = LSTMVertex(input_dim=5, hidden=4)
+    tr = TokenReadout(cell, vocab=7)
+    tp = tr.init(jax.random.PRNGKey(6))
+    rng = np.random.default_rng(6)
+    states = _roots(rng, 5, cell.state_dim)
+    logits_fn = jax.jit(tr.logits)
+    batched = np.asarray(logits_fn(tp, states))
+    for i in range(5):
+        solo = np.asarray(logits_fn(tp, states[i: i + 1]))[0]
+        np.testing.assert_array_equal(batched[i], solo)

@@ -100,3 +100,71 @@ def test_decode_rejects_tree_cells():
     fn = TreeLSTMVertex(input_dim=4, hidden=3, arity=2)
     with pytest.raises(ValueError, match="arity"):
         VertexServeEngine(fn, fn.init(jax.random.PRNGKey(0)), num_slots=2)
+
+
+def test_timeout_freed_slot_rows_are_zeroed_before_reuse():
+    """Regression: rows freed by the deadline sweep must be re-zeroed.
+
+    Correctness never reads a freed slot's stale rows (a fresh admission
+    gathers the zero SENTINEL at position 0), but a dead request's
+    states must not linger in the pool — the invariant is that a slot
+    freed by timeout or tick failure leaves BOTH its ping-pong rows
+    exactly zero, and the next admission into it is bitwise what a
+    fresh engine computes."""
+    fn = LSTMVertex(input_dim=4, hidden=3)
+    params = fn.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    long_x = rng.standard_normal((50, 4)).astype(np.float32)
+    short_x = rng.standard_normal((5, 4)).astype(np.float32)
+
+    t = [0.0]
+    eng = VertexServeEngine(fn, params, num_slots=1, clock=lambda: t[0])
+    victim = VertexRequest(request_id=0, inputs=long_x, ttl=0.5)
+    assert eng.submit(victim)
+    for _ in range(3):
+        eng.step()                        # mid-flight: rows are non-zero
+    assert float(np.abs(np.asarray(eng._buf)).max()) > 0.0
+    t[0] = 1.0
+    eng.step()                            # deadline sweep frees slot 0
+    assert victim.status == "timeout"
+    # Both ping-pong rows of the freed slot are exactly zero again
+    # (row 2 is the sentinel, zero by construction).
+    np.testing.assert_array_equal(np.asarray(eng._buf),
+                                  np.zeros_like(np.asarray(eng._buf)))
+
+    # Post-timeout admission sees a clean pool: bitwise equal to a
+    # fresh engine scoring the same request.
+    reused = VertexRequest(request_id=1, inputs=short_x)
+    assert eng.submit(reused)
+    eng.run()
+    assert reused.status == "ok"
+
+    fresh_eng = VertexServeEngine(fn, params, num_slots=1)
+    fresh = VertexRequest(request_id=2, inputs=short_x)
+    assert fresh_eng.submit(fresh)
+    fresh_eng.run()
+    np.testing.assert_array_equal(reused.final_state, fresh.final_state)
+
+
+def test_tick_failure_zeroes_freed_slot_rows():
+    """The other freeing path: a double-rung tick failure routes every
+    in-flight request to ``failed`` — the vacated rows must be zero."""
+    fn = LSTMVertex(input_dim=4, hidden=3)
+    params = fn.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    eng = VertexServeEngine(fn, params, num_slots=2, fusion_mode="none")
+    eng.submit(VertexRequest(
+        request_id=0,
+        inputs=rng.standard_normal((6, 4)).astype(np.float32)))
+    eng.step()                            # rows now hold live state
+
+    # Break BOTH rungs for the next tick: oracle included.
+    orig = eng._tick_oracle
+    eng._tick_oracle = lambda *a: (_ for _ in ()).throw(RuntimeError("boom"))
+    try:
+        eng.step()
+    finally:
+        eng._tick_oracle = orig
+    assert eng.finished[-1].status == "failed"
+    np.testing.assert_array_equal(np.asarray(eng._buf),
+                                  np.zeros_like(np.asarray(eng._buf)))
