@@ -1,0 +1,164 @@
+"""Distributed data parallel (beyond-paper): sharded composition
+quality and the mesh train step.
+
+Host-side (any device count): ``BatchComposer.compose_sharded`` is
+scored on the two properties the trainer depends on — replica NODE
+BALANCE (no replica stalls the all-reduce behind a heavier schedule)
+and PER-REPLICA schedule-cache hit rate in a warm epoch (every
+replica's fingerprint stream must stay stable, or the data-parallel
+speedup drowns in re-packing).  Both are CI-gated via
+``--assert-balance`` / ``--assert-hits`` in the tier1-dist bench-smoke
+step.
+
+Mesh-side (needs ≥2 host devices, e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``): wall time of
+the ``dp_shard`` megastep train step — stacked ``DeviceSchedule``,
+``shard_map`` over the data axis, int8+EF gradient reduction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Collector, time_stats
+from repro.core.scheduler import execute, readout_roots
+from repro.core.structure import random_binary_tree
+from repro.dist.elastic import remesh
+from repro.models.treelstm import TreeLSTMVertex
+from repro.pipeline import ShardedPipeline
+from repro.train import TrainConfig, Trainer
+
+INPUT_DIM, HIDDEN = 8, 4
+
+
+def _corpus(seed, n, max_nodes):
+    rng = np.random.default_rng(seed)
+    graphs = [random_binary_tree(int(rng.integers(2, max_nodes)), rng)
+              for _ in range(n)]
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM))
+              .astype(np.float32) * 0.3 for g in graphs]
+    return graphs, inputs
+
+
+def _host_side(col, args, graphs, inputs, shards, batch_size):
+    pipe = ShardedPipeline(INPUT_DIM, shards)
+    comp = pipe.composer(batch_size)
+
+    t0 = time.perf_counter()
+    steps, stats = comp.compose_sharded(graphs, inputs,
+                                        num_shards=shards)
+    compose_ms = (time.perf_counter() - t0) * 1e3
+    col.add("compose_sharded", compose_ms, "ms",
+            f"n={len(graphs)} shards={shards} steps={stats.num_steps}")
+    col.add("replica_node_imbalance", stats.node_imbalance, "ratio",
+            f"max/min of {list(stats.replica_nodes)}")
+    col.add("fillers", stats.num_fillers, "samples",
+            f"of {len(graphs)} real")
+
+    # epoch 1 (cold) then epoch 2 (warm) through per-replica caches
+    t0 = time.perf_counter()
+    for st in steps:
+        pipe.pack_step(st)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    snaps = [dict(p.cache.stats()) for p in pipe.pipes]
+    steps2, _ = comp.compose_sharded(graphs, inputs, num_shards=shards)
+    t0 = time.perf_counter()
+    for st in steps2:
+        pipe.pack_step(st)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    col.add("epoch_pack_cold", cold_ms, "ms", f"{len(steps)} steps")
+    col.add("epoch_pack_warm", warm_ms, "ms", f"{len(steps)} steps")
+
+    hit_rates = []
+    for r, p in enumerate(pipe.pipes):
+        s = p.cache.stats()
+        hits = s["hits"] - snaps[r]["hits"]
+        total = hits + (s["misses"] - snaps[r]["misses"])
+        hit_rates.append(hits / total if total else 0.0)
+    col.add("epoch2_hit_rate_min", min(hit_rates), "rate",
+            f"per-replica {['%.2f' % h for h in hit_rates]}")
+
+    if args.assert_balance is not None \
+            and stats.node_imbalance > args.assert_balance:
+        print(f"# GATE FAILED: node imbalance {stats.node_imbalance:.3f}"
+              f" > {args.assert_balance}", flush=True)
+        sys.exit(1)
+    if args.assert_hits is not None \
+            and min(hit_rates) < args.assert_hits:
+        print(f"# GATE FAILED: min per-replica epoch-2 hit rate "
+              f"{min(hit_rates):.3f} < {args.assert_hits}", flush=True)
+        sys.exit(1)
+    return steps, pipe
+
+
+def _mesh_side(col, graphs, inputs, batch_size):
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        col.add("sharded_train_step", 0.0, "ms",
+                "skipped: single device (set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8)")
+        return
+    shards = n_dev
+    fn = TreeLSTMVertex(input_dim=INPUT_DIM, hidden=HIDDEN, arity=2)
+    mesh = remesh(jax.devices(), {"data": shards})
+
+    def loss_fn(params, batch):
+        buf = execute(fn, params, batch["dev"], batch["ext"],
+                      fusion_mode="auto").buf
+        root_h = readout_roots(buf, batch["dev"])[:, HIDDEN:]
+        per = jnp.mean(root_h ** 2, axis=-1)
+        return jnp.sum(per * batch["weights"]), {}
+
+    pipe = ShardedPipeline(INPUT_DIM, shards)
+    tr = Trainer(loss_fn, lambda k: fn.init(k),
+                 TrainConfig(lr=1e-3, warmup_steps=2, total_steps=10 ** 6,
+                             weight_decay=0.0, log_every=10 ** 6,
+                             dp_shard=True, compress_grads=True),
+                 mesh=mesh)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    steps, _ = pipe.composer(batch_size).compose_sharded(
+        graphs, inputs, num_shards=shards)
+    batch = pipe.pack_step(steps[0])
+    with mesh:
+        step_fn = tr._build_step(batch)
+        state, _ = step_fn(state, batch)        # compile + warm
+
+        def once():
+            nonlocal state
+            state, m = step_fn(state, batch)
+            return m["loss"]
+
+        col.add_time("sharded_train_step", time_stats(once, iters=10),
+                     f"R={shards} bs={batch_size} compress+EF")
+
+
+def main(argv=None) -> Collector:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--assert-balance", type=float, default=None,
+                    help="fail if replica node imbalance exceeds this")
+    ap.add_argument("--assert-hits", type=float, default=None,
+                    help="fail if any replica's epoch-2 cache hit rate "
+                         "is below this")
+    args = ap.parse_args(argv)
+
+    col = Collector()
+    if args.full:
+        n, max_nodes, shards, bs = 1024, 48, 8, 64
+    else:
+        n, max_nodes, shards, bs = 256, 32, 8, 32
+    graphs, inputs = _corpus(args.seed, n, max_nodes)
+    _host_side(col, args, graphs, inputs, shards, bs)
+    _mesh_side(col, graphs, inputs, bs)
+    return col
+
+
+if __name__ == "__main__":
+    main()

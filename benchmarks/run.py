@@ -19,7 +19,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_ablation, bench_fixed_lstm,
+from benchmarks import (bench_ablation, bench_dist, bench_fixed_lstm,
                         bench_graph_construction, bench_memory,
                         bench_roofline, bench_serving, bench_tree_fc,
                         bench_tree_lstm, bench_var_lstm)
@@ -34,6 +34,7 @@ SUITES = [
     ("ablation (Fig 10)", bench_ablation),
     ("roofline (beyond-paper)", bench_roofline),
     ("serving (beyond-paper)", bench_serving),
+    ("dist (beyond-paper)", bench_dist),
 ]
 
 

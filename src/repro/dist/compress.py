@@ -50,12 +50,73 @@ class ErrorFeedback:
         return out, ErrorFeedback(new_res)
 
 
+def _axis_count_f32(axis_name: str) -> jax.Array:
+    """Replica count over ``axis_name``, accumulated in f32.
+
+    Counting in the payload dtype is wrong for bf16/fp16 gradients: bf16
+    has an 8-bit mantissa, so past 256 replicas ``psum(ones)`` stops
+    incrementing and the mean divides by the wrong count.
+    """
+    return jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+
+
 def cross_pod_mean_int8(x: jax.Array, *, axis_name: str) -> jax.Array:
     """Mean over ``axis_name`` with int8-quantized payloads.
 
     Each shard quantizes locally (its own scale travels as one f32), the
     dequantized contributions are summed with ``psum``, and the mean is
     taken — simulating the int8 wire format on the slow cross-pod link.
+    Count and accumulation run in f32 regardless of payload dtype so
+    low-precision gradients still divide by the exact replica count.
     """
-    n = jax.lax.psum(jnp.ones((), x.dtype), axis_name)
-    return jax.lax.psum(fake_quant(x), axis_name) / n
+    n = _axis_count_f32(axis_name)
+    total = jax.lax.psum(fake_quant(x).astype(jnp.float32), axis_name)
+    return (total / n).astype(x.dtype)
+
+
+def cross_pod_mean_int8_ef(
+    x: jax.Array, residual: jax.Array, *, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback variant of :func:`cross_pod_mean_int8`.
+
+    The local residual is folded into the payload before quantization
+    and the new residual ``acc - Q(acc)`` is returned alongside the
+    mean, so the *sum* of emitted means converges to the true sum even
+    though each step's wire format is int8.
+    """
+    acc = x + residual
+    emitted = fake_quant(acc)
+    new_residual = acc - emitted
+    n = _axis_count_f32(axis_name)
+    total = jax.lax.psum(emitted.astype(jnp.float32), axis_name)
+    return (total / n).astype(x.dtype), new_residual
+
+
+def cross_pod_mean_int8_ef_tree(
+    tree: Any, residual: Any, *, axis_name: str
+) -> Tuple[Any, Any]:
+    """:func:`cross_pod_mean_int8_ef` over a whole gradient pytree —
+    the collective the trainer's sharded compress leg calls.  Returns
+    ``(mean_tree, new_residual_tree)``; the residual stays local to the
+    replica (never travels)."""
+    acc = jax.tree.map(jnp.add, tree, residual)
+    emitted = jax.tree.map(fake_quant, acc)
+    new_residual = jax.tree.map(jnp.subtract, acc, emitted)
+    n = _axis_count_f32(axis_name)
+    mean = jax.tree.map(
+        lambda e: (jax.lax.psum(e.astype(jnp.float32), axis_name)
+                   / n).astype(e.dtype),
+        emitted)
+    return mean, new_residual
+
+
+def ef_apply(tree: Any, residual: Any) -> Tuple[Any, Any]:
+    """Tree-level local EF step: ``(emitted, new_residual)``.
+
+    No collective — suitable for the single-replica trainer leg where
+    the "wire" is just the optimizer update.
+    """
+    acc = jax.tree.map(jnp.add, tree, residual)
+    emitted = jax.tree.map(fake_quant, acc)
+    new_residual = jax.tree.map(jnp.subtract, acc, emitted)
+    return emitted, new_residual

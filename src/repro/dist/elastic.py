@@ -22,16 +22,26 @@ def plan_downsize(shape: Dict[str, int], dead_fraction: float) -> DownsizePlan:
     """Shrink the outermost non-``model`` axis to the largest power of
     two that fits the surviving devices.  TP degree is preserved so the
     parameter sharding (and the compiled program) survive the restart.
+
+    Devices die in integer numbers, so the surviving count is computed
+    as one: ``dead = round(rows * dead_fraction)`` (half-up, so fp noise
+    around an exact integer product — ``14 * (1 - 3/7) = 7.999…`` —
+    cannot push an exactly-surviving power of two below itself and
+    halve the mesh unnecessarily).
     """
     new = dict(shape)
     data_axes = [a for a in shape if a != "model"]
     if not data_axes:
         return DownsizePlan(new_shape=new, dropped_rows=0)
     ax = data_axes[0]
-    surviving = shape[ax] * (1.0 - dead_fraction)
-    if surviving < 1.0:
+    if not 0.0 <= dead_fraction <= 1.0:
+        raise ValueError(f"dead_fraction must be in [0, 1], "
+                         f"got {dead_fraction}")
+    dead = int(math.floor(shape[ax] * dead_fraction + 0.5))
+    surviving = shape[ax] - dead
+    if surviving < 1:
         raise ValueError(f"dead_fraction={dead_fraction} leaves no {ax} rows")
-    new_n = 1 << int(math.floor(math.log2(surviving)))
+    new_n = 1 << (surviving.bit_length() - 1)   # pow2 floor, exactly
     new[ax] = new_n
     return DownsizePlan(new_shape=new, dropped_rows=shape[ax] - new_n)
 

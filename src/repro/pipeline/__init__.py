@@ -6,17 +6,21 @@ from repro.pipeline.buckets import (BucketPolicy, PadDims, ShapeCensus,
                                     TIGHT, tight_dims)
 from repro.pipeline.cache import ScheduleCache, cache_enabled_default
 from repro.pipeline.composer import (BatchComposer, ComposedBatch,
-                                     CompositionStats, fifo_stats)
+                                     CompositionStats,
+                                     ShardedCompositionStats, ShardedStep,
+                                     fifo_stats)
 from repro.pipeline.fingerprint import batch_fingerprint, graph_fingerprint
 from repro.pipeline.persist import (SCHEMA_VERSION, SchedulePersist,
                                     persist_dir_default)
-from repro.pipeline.pipeline import PackedBatch, SchedulePipeline
+from repro.pipeline.pipeline import (PackedBatch, SchedulePipeline,
+                                     ShardedPipeline)
 from repro.pipeline.prefetch import AsyncPacker
 
 __all__ = [
     "AsyncPacker", "BatchComposer", "BucketPolicy", "ComposedBatch",
     "CompositionStats", "PackedBatch", "PadDims", "SCHEMA_VERSION",
-    "ScheduleCache", "SchedulePersist", "SchedulePipeline", "ShapeCensus",
-    "TIGHT", "batch_fingerprint", "cache_enabled_default", "fifo_stats",
-    "graph_fingerprint", "persist_dir_default", "tight_dims",
+    "ScheduleCache", "SchedulePersist", "SchedulePipeline",
+    "ShardedCompositionStats", "ShardedPipeline", "ShardedStep",
+    "ShapeCensus", "TIGHT", "batch_fingerprint", "cache_enabled_default",
+    "fifo_stats", "graph_fingerprint", "persist_dir_default", "tight_dims",
 ]

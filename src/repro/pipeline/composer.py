@@ -60,6 +60,61 @@ class ComposedBatch:
         return self.graphs, self.inputs, aux, self.pads
 
 
+@dataclasses.dataclass
+class ShardedStep:
+    """One data-parallel train step: ``num_shards`` equal-cardinality
+    sub-batches (one per replica) packed at shared ``pads`` so the
+    per-replica ``DeviceSchedule`` pytrees stack into one ``[R, ...]``
+    batch for ``shard_map``.  Ragged splits are topped up with filler
+    samples (duplicated graphs, ``weight 0.0``, ``sample_id -1``) so
+    every replica always carries the same graph count."""
+
+    replicas: List[ComposedBatch]
+    pads: Optional[PadDims] = None
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.replicas)
+
+    def __len__(self) -> int:
+        """Real (non-filler) samples in the step."""
+        return sum(int(np.sum(r.sample_ids >= 0)) for r in self.replicas)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCompositionStats:
+    """Per-epoch accounting for the sharded plan.
+
+    ``base`` scores the pre-split union batches with the unsharded
+    ruler; ``replica_nodes`` is each replica's total packed node count
+    over the epoch (fillers included — they are real compute), and
+    ``replica_hit_rate`` the *predicted* per-replica schedule-cache hit
+    rate against an empty cache (same definition as
+    :attr:`CompositionStats.hit_rate`)."""
+
+    base: CompositionStats
+    num_shards: int
+    num_steps: int
+    num_fillers: int
+    replica_nodes: Tuple[int, ...]
+    replica_hit_rate: Tuple[float, ...]
+
+    @property
+    def node_imbalance(self) -> float:
+        """max/min per-replica total node count (1.0 = perfect)."""
+        lo, hi = min(self.replica_nodes), max(self.replica_nodes)
+        return hi / lo if lo else float("inf")
+
+    def summary(self) -> Dict[str, Any]:
+        s = self.base.summary()
+        s.update(num_shards=self.num_shards, num_steps=self.num_steps,
+                 num_fillers=self.num_fillers,
+                 node_imbalance=self.node_imbalance,
+                 replica_nodes=list(self.replica_nodes),
+                 replica_hit_rate=list(self.replica_hit_rate))
+        return s
+
+
 @dataclasses.dataclass(frozen=True)
 class CompositionStats:
     """Per-epoch accounting of what composition bought.
@@ -205,6 +260,114 @@ class BatchComposer:
             leftover_batches=len(plan) - group_batches)
         return batches, stats
 
+    def compose_sharded(self, graphs: Sequence[InputGraph],
+                        inputs: Optional[Sequence[np.ndarray]] = None,
+                        aux: Optional[Dict[str, Sequence[Any]]] = None,
+                        *, num_shards: int,
+                        ) -> Tuple[List[ShardedStep], ShardedCompositionStats]:
+        """Compose one epoch into data-parallel train steps.
+
+        The epoch is planned exactly as :meth:`compose` (same groups,
+        same leftover order — ``batch_size`` is the GLOBAL step size),
+        then every planned batch is split into ``num_shards``
+        equal-cardinality sub-batches balanced by total node count and
+        depth, so no replica stalls the gradient sync on a heavier
+        schedule.  The split is deterministic in the multiset of
+        topology digests, so per-replica batch fingerprints are stable
+        across epochs — every replica keeps hitting its own
+        ``ScheduleCache``/persist tier, and same-fingerprint group
+        batches still manufacture within-epoch hits per replica.
+
+        Ragged batches (tail leftovers, corpora smaller than a step)
+        are topped up with fillers: the batch's smallest graph is
+        duplicated with ``weight 0.0`` and ``sample_id -1``, keeping
+        replica cardinality equal while contributing exact zeros to the
+        weighted loss.  Each step's replicas share one ``pads`` cover
+        (bucket-quantized elementwise max over the union) so their
+        packed schedules stack into a single ``[R, ...]`` pytree;
+        singleton covers consolidate across steps exactly like
+        :meth:`compose` batches.  Every replica batch carries a
+        ``weights`` aux rider; user riders named ``weights`` are
+        therefore rejected."""
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if self.batch_size % num_shards:
+            raise ValueError(
+                f"batch_size={self.batch_size} must be divisible by "
+                f"num_shards={num_shards} so full batches split into "
+                f"equal per-replica sub-batches")
+        n = len(graphs)
+        if n == 0:
+            raise ValueError("empty corpus")
+        if inputs is not None and len(inputs) != n:
+            raise ValueError(f"{len(inputs)} inputs for {n} graphs")
+        aux = dict(aux or {})
+        for name, vals in aux.items():
+            if name in ("sample_ids", "weights"):
+                raise ValueError(
+                    f"aux rider name {name!r} is reserved — sharded "
+                    f"composition emits corpus indices and filler "
+                    f"weights under those keys")
+            if len(vals) != n:
+                raise ValueError(
+                    f"aux rider {name!r} has {len(vals)} values for "
+                    f"{n} graphs")
+
+        plan, num_groups, group_batches = self._plan(graphs)
+        steps: List[ShardedStep] = []
+        num_fillers = 0
+        for idxs in plan:
+            ridxs, rweights = self._split_replicas(graphs, idxs, num_shards)
+            reps = []
+            for r in range(num_shards):
+                wts = rweights[r]
+                num_fillers += sum(1 for w in wts if w == 0.0)
+                rep_aux = {name: [vals[i] for i in ridxs[r]]
+                           for name, vals in aux.items()}
+                rep_aux["weights"] = list(wts)
+                reps.append(ComposedBatch(
+                    graphs=[graphs[i] for i in ridxs[r]],
+                    inputs=(None if inputs is None
+                            else [inputs[i] for i in ridxs[r]]),
+                    aux=rep_aux,
+                    sample_ids=np.asarray(
+                        [i if w > 0 else -1
+                         for i, w in zip(ridxs[r], wts)], np.int64)))
+            union = [g for rep in reps for g in rep.graphs]
+            pads = (self.bucket_policy.bucket(union)
+                    if self.bucket_policy is not None
+                    else PadDims(*tight_dims(union)))
+            steps.append(ShardedStep(replicas=reps, pads=pads))
+
+        # Steps carry `.pads` exactly like batches, so the singleton-
+        # bucket consolidation applies unchanged — one cover per step.
+        self._consolidate(steps)
+        for st in steps:
+            for rep in st.replicas:
+                rep.pads = st.pads
+
+        base = _batch_stats(
+            [[g for rep in st.replicas for g in rep.graphs]
+             for st in steps],
+            [st.pads for st in steps],
+            num_groups=num_groups, group_batches=group_batches,
+            leftover_batches=len(plan) - group_batches)
+        replica_nodes = tuple(
+            sum(g.num_nodes for st in steps
+                for g in st.replicas[r].graphs)
+            for r in range(num_shards))
+        replica_hit_rate = []
+        for r in range(num_shards):
+            fps = [batch_fingerprint(st.replicas[r].graphs, st.pads)
+                   for st in steps]
+            replica_hit_rate.append(
+                (len(fps) - len(set(fps))) / len(fps) if fps else 0.0)
+        stats = ShardedCompositionStats(
+            base=base, num_shards=num_shards, num_steps=len(steps),
+            num_fillers=num_fillers, replica_nodes=replica_nodes,
+            replica_hit_rate=tuple(replica_hit_rate))
+        return steps, stats
+
     def compose_iter(self, graphs: Sequence[InputGraph],
                      inputs: Optional[Sequence[np.ndarray]] = None,
                      aux: Optional[Dict[str, Sequence[Any]]] = None,
@@ -251,6 +414,48 @@ class BatchComposer:
         for i in range(0, len(leftovers), bs):
             plan.append(leftovers[i: i + bs])
         return plan, len(groups), group_batches
+
+    def _split_replicas(self, graphs: Sequence[InputGraph],
+                        idxs: List[int], num_shards: int
+                        ) -> Tuple[List[List[int]], List[List[float]]]:
+        """Split one planned batch into ``num_shards`` sub-batches of
+        exactly ``ceil(len(idxs)/R)`` graphs each: LPT greedy under an
+        equal-cardinality constraint — samples sorted by (node count,
+        depth) descending go to the least-node-loaded replica with a
+        free slot.  Ties break on topology digest before corpus index,
+        so the per-replica digest multiset (hence batch fingerprint)
+        depends only on the batch's topology content, not on arrival
+        order — stable across epochs even under corpus shuffles.
+        Short replicas are topped up with the batch's smallest graph as
+        a weight-0.0 filler."""
+        R = num_shards
+        k = -(-len(idxs) // R)
+
+        def key(i):
+            g = graphs[i]
+            return (-g.num_nodes, -(int(g.levels().max()) + 1),
+                    graph_fingerprint(g), i)
+
+        items = sorted(idxs, key=key)
+        loads = [0] * R
+        counts = [0] * R
+        out: List[List[int]] = [[] for _ in range(R)]
+        for i in items:
+            free = [r for r in range(R) if counts[r] < k]
+            r = min(free, key=lambda r: (loads[r], r))
+            out[r].append(i)
+            counts[r] += 1
+            loads[r] += graphs[i].num_nodes
+        filler = items[-1]                  # smallest graph in the batch
+        weights: List[List[float]] = []
+        for r in range(R):
+            w = [1.0] * len(out[r])
+            while counts[r] < k:
+                out[r].append(filler)
+                w.append(0.0)
+                counts[r] += 1
+            weights.append(w)
+        return out, weights
 
     def _consolidate(self, batches: List[ComposedBatch]) -> None:
         """Bucket consolidation (step 4 of the plan).

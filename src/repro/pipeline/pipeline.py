@@ -41,6 +41,7 @@ from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
@@ -48,7 +49,8 @@ from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
 from repro.dist.fault import chaos_corrupt_ext
 from repro.pipeline.buckets import BucketPolicy, PadDims, ShapeCensus
 from repro.pipeline.cache import ScheduleCache
-from repro.pipeline.composer import BatchComposer, CompositionStats
+from repro.pipeline.composer import (BatchComposer, CompositionStats,
+                                     ShardedStep)
 from repro.pipeline.prefetch import AsyncPacker
 
 
@@ -171,3 +173,100 @@ class SchedulePipeline:
         s.update(self.census.summary())
         s["compiled_shapes"] = self.census.num_shapes
         return s
+
+
+class ShardedPipeline:
+    """The data-parallel face of the schedule pipeline: one
+    :class:`SchedulePipeline` (own :class:`ScheduleCache` tier) PER
+    REPLICA, plus the step-stacking that turns a composer
+    :class:`~repro.pipeline.composer.ShardedStep` into a single
+    ``shard_map``-ready batch dict.
+
+    Each replica packs its own sub-batch through its own pipeline — the
+    per-replica fingerprint streams the sharded composer keeps stable
+    land in per-replica caches, so no replica's hit rate is diluted by
+    its neighbours' topologies.  All replicas in a step pack at the
+    step's shared ``pads`` cover, so the per-replica
+    ``DeviceSchedule``/external pytrees stack leaf-wise into ``[R,
+    ...]`` arrays that shard over the mesh's data axis.
+    """
+
+    def __init__(self, ext_dim: int, num_shards: int, *,
+                 bucket_policy: Optional[BucketPolicy] = BucketPolicy(),
+                 cache_capacity: int = 128,
+                 with_runs: bool = True):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.ext_dim = ext_dim
+        self.num_shards = num_shards
+        self.bucket_policy = bucket_policy
+        self.pipes = [SchedulePipeline(ext_dim, bucket_policy=bucket_policy,
+                                       cache_capacity=cache_capacity,
+                                       with_runs=with_runs)
+                      for _ in range(num_shards)]
+
+    def composer(self, batch_size: int) -> BatchComposer:
+        """A :class:`BatchComposer` sharing this pipeline's bucket
+        policy; ``batch_size`` is the GLOBAL step size (must divide by
+        :attr:`num_shards` — ``compose_sharded`` enforces it)."""
+        return BatchComposer(batch_size, bucket_policy=self.bucket_policy)
+
+    # -- one train step ---------------------------------------------------
+    def pack_step(self, step: ShardedStep) -> Dict[str, Any]:
+        """Pack every replica's sub-batch (through its own cache) at
+        the step's shared pads and stack the results: ``{"dev":
+        DeviceSchedule[R, ...], "ext": [R, K*N+1, X], "weights":
+        [R, K], "sample_ids": [R, K], **aux riders [R, K, ...]}``.
+
+        Leading axis ``R`` is the mesh data axis; feed the dict to a
+        ``shard_map``-wrapped step with ``P("data")`` in-specs (the
+        :class:`~repro.train.trainer.Trainer` ``dp_shard`` leg does
+        exactly this)."""
+        if step.num_shards != self.num_shards:
+            raise ValueError(
+                f"step has {step.num_shards} replicas for a "
+                f"{self.num_shards}-shard pipeline")
+        packed = [self.pipes[r].pack(rep.graphs, rep.inputs,
+                                     pads=step.pads)
+                  for r, rep in enumerate(step.replicas)]
+        dev = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[p.dev for p in packed])
+        ext = jnp.stack([p.ext for p in packed])
+        batch: Dict[str, Any] = {
+            "dev": dev, "ext": ext,
+            "weights": jnp.asarray(np.stack(
+                [np.asarray(rep.aux.get("weights",
+                                        [1.0] * len(rep.graphs)),
+                            np.float32)
+                 for rep in step.replicas])),
+            "sample_ids": np.stack(
+                [rep.sample_ids for rep in step.replicas]),
+        }
+        for name in step.replicas[0].aux:
+            if name == "weights":
+                continue
+            batch[name] = np.stack(
+                [np.asarray(rep.aux[name]) for rep in step.replicas])
+        return batch
+
+    # -- a stream of steps -------------------------------------------------
+    def prefetch(self, source: Iterable[ShardedStep], *,
+                 depth: int = 2) -> AsyncPacker:
+        """Async stage over a stream of :class:`ShardedStep`: all R
+        per-replica packs (and their cache bookkeeping) run on a
+        background thread, ``depth`` steps ahead of the consumer."""
+        return AsyncPacker(source, self.pack_step, depth=depth)
+
+    # -- accounting -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Aggregated counters plus the full per-replica breakdown
+        (``per_replica[r]`` is replica r's ``SchedulePipeline.stats()``
+        — diff snapshots across epochs for measured hit rates)."""
+        per = [p.stats() for p in self.pipes]
+        out: Dict[str, Any] = {"per_replica": per}
+        for key in ("hits", "misses", "disk_hits", "packs"):
+            if all(key in s for s in per):
+                out[key] = sum(s[key] for s in per)
+        return out
+
+

@@ -55,6 +55,128 @@ def _random_corpus(rng: np.random.Generator, n: int, dup_frac: float = 0.5):
 
 
 # ---------------------------------------------------------------------------
+# Sharded composition (data-parallel replica splitting)
+# ---------------------------------------------------------------------------
+
+def test_compose_sharded_is_lossless_and_equal_cardinality():
+    rng = np.random.default_rng(0)
+    corpus = _random_corpus(rng, 83)           # ragged tail on purpose
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM))
+              .astype(np.float32) for g in corpus]
+    labels = list(range(len(corpus)))
+    comp = BatchComposer(16)
+    steps, stats = comp.compose_sharded(corpus, inputs, {"label": labels},
+                                        num_shards=4)
+    # every real sample exactly once; fillers are weight-0 / id -1
+    ids = np.concatenate([r.sample_ids for st in steps
+                          for r in st.replicas])
+    assert np.array_equal(np.sort(ids[ids >= 0]), np.arange(len(corpus)))
+    for st in steps:
+        assert len({len(r.graphs) for r in st.replicas}) == 1
+        assert all(r.pads == st.pads for r in st.replicas)
+        for rep in st.replicas:
+            for sid, w, lab, g, x in zip(
+                    rep.sample_ids, rep.aux["weights"],
+                    rep.aux["label"], rep.graphs, rep.inputs):
+                if sid >= 0:
+                    assert w == 1.0 and lab == sid
+                    assert g is corpus[sid] and x is inputs[sid]
+                else:
+                    assert w == 0.0
+            # replica fits the step's pad cover
+            t, m, a, n = tight_dims(rep.graphs)
+            assert (t <= st.pads.levels and m <= st.pads.width
+                    and a <= st.pads.arity and n <= st.pads.nodes)
+    assert stats.num_fillers == sum(
+        int(np.sum(r.sample_ids < 0)) for st in steps for r in st.replicas)
+
+
+def test_compose_sharded_balances_node_counts():
+    """The acceptance bar: ≤1.15x max/min total node count across
+    replicas on a realistic mixed corpus."""
+    rng = np.random.default_rng(7)
+    corpus = [random_binary_tree(int(rng.integers(2, 40)), rng)
+              for _ in range(256)]
+    comp = BatchComposer(32)
+    _, stats = comp.compose_sharded(corpus, num_shards=8)
+    assert stats.node_imbalance <= 1.15, stats.replica_nodes
+
+
+def test_compose_sharded_fingerprints_stable_across_epochs():
+    """Replica r's batch-fingerprint stream must be identical epoch
+    over epoch (that is what keeps every replica's schedule cache hot)
+    — including under a corpus shuffle, because the split keys on
+    topology digests, not arrival order."""
+    from repro.pipeline import batch_fingerprint
+
+    rng = np.random.default_rng(3)
+    corpus = _random_corpus(rng, 96)
+    comp = BatchComposer(16)
+
+    def fp_streams(graphs):
+        steps, _ = comp.compose_sharded(graphs, num_shards=4)
+        return [[batch_fingerprint(st.replicas[r].graphs, st.pads)
+                 for st in steps] for r in range(4)]
+
+    a = fp_streams(corpus)
+    b = fp_streams(corpus)                     # same epoch again
+    assert a == b
+    perm = rng.permutation(len(corpus))
+    shuffled = [corpus[i] for i in perm]
+    c = fp_streams(shuffled)
+    assert a == c                              # order-independent
+
+
+def test_compose_sharded_matches_unsharded_plan_and_hit_rate():
+    """Sharding must not change WHAT is in each step: step t's union of
+    real samples equals unsharded batch t, and the predicted
+    per-replica hit rate is no worse than the unsharded one (grouped
+    batches stay grouped after splitting)."""
+    rng = np.random.default_rng(11)
+    corpus = _random_corpus(rng, 128, dup_frac=0.6)
+    comp = BatchComposer(16)
+    batches, ustats = comp.compose(corpus)
+    steps, sstats = comp.compose_sharded(corpus, num_shards=4)
+    assert len(steps) == len(batches)
+    for st, cb in zip(steps, batches):
+        union = np.concatenate([r.sample_ids for r in st.replicas])
+        assert set(union[union >= 0]) == set(cb.sample_ids)
+    assert ustats.hit_rate > 0                 # corpus manufactures hits
+    for r_rate in sstats.replica_hit_rate:
+        assert r_rate >= ustats.hit_rate - 1e-9
+
+
+def test_compose_sharded_small_corpus_pads_with_fillers():
+    corpus = [chain(3), chain(3), chain(5)]
+    comp = BatchComposer(8)
+    steps, stats = comp.compose_sharded(corpus, num_shards=4)
+    assert len(steps) == 1
+    st = steps[0]
+    assert all(len(r.graphs) == 1 for r in st.replicas)
+    ids = np.concatenate([r.sample_ids for r in st.replicas])
+    assert np.array_equal(np.sort(ids[ids >= 0]), np.arange(3))
+    assert stats.num_fillers == 1
+    assert stats.num_shards == 4 and stats.num_steps == 1
+
+
+def test_compose_sharded_validates():
+    comp = BatchComposer(10)
+    with pytest.raises(ValueError, match="divisible"):
+        comp.compose_sharded([chain(2)], num_shards=4)
+    comp = BatchComposer(8)
+    with pytest.raises(ValueError, match="empty"):
+        comp.compose_sharded([], num_shards=4)
+    with pytest.raises(ValueError, match="reserved"):
+        comp.compose_sharded([chain(2)], aux={"weights": [1.0]},
+                             num_shards=4)
+    with pytest.raises(ValueError, match="reserved"):
+        comp.compose_sharded([chain(2)], aux={"sample_ids": [0]},
+                             num_shards=4)
+    with pytest.raises(ValueError, match="num_shards"):
+        comp.compose_sharded([chain(2)], num_shards=0)
+
+
+# ---------------------------------------------------------------------------
 # Properties: lossless permutation, rider alignment, pad bounds
 # ---------------------------------------------------------------------------
 

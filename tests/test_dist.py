@@ -214,6 +214,64 @@ print("OK")
 """, n_devices=2)
 
 
+def test_cross_pod_mean_counts_replicas_exactly_in_low_precision():
+    """bf16 has an 8-bit mantissa: 257 replicas counted via
+    ``psum(ones)`` in the payload dtype round to 256 and the mean
+    divides by the wrong count.  The count (and accumulation) must run
+    in f32 regardless of payload dtype."""
+    n = 257
+    xs = jnp.full((n,), 127.0, jnp.bfloat16)  # fake_quant-exact payload
+    out = jax.vmap(lambda x: compress.cross_pod_mean_int8(
+        x, axis_name="pod"), axis_name="pod")(xs)
+    assert out.dtype == jnp.bfloat16
+    # 127.0 quantizes exactly (scale 1.0, q=127) and 257*127 = 32639 is
+    # exact in f32, so the mean must come back as exactly 127.0.
+    np.testing.assert_array_equal(np.asarray(out, np.float32), 127.0)
+
+
+def test_cross_pod_mean_ef_residual_and_convergence():
+    """The collective EF form: residuals stay local, and the sum of
+    emitted means converges to the true mean sum."""
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.standard_normal((2, 64)) * 1e-4, jnp.float32)
+    steps = 50
+    res = jnp.zeros_like(vals)
+    acc = np.zeros(64)
+
+    @jax.jit
+    def one(v, r):
+        return jax.vmap(lambda x, e: compress.cross_pod_mean_int8_ef(
+            x, e, axis_name="pod"), axis_name="pod")(v, r)
+
+    for _ in range(steps):
+        mean, res = one(vals, res)
+        np.testing.assert_array_equal(np.asarray(mean[0]),
+                                      np.asarray(mean[1]))
+        acc += np.asarray(mean[0])
+    true = steps * np.asarray(jnp.mean(vals, axis=0))
+    naive = steps * np.asarray(jax.vmap(
+        lambda x: compress.cross_pod_mean_int8(x, axis_name="pod"),
+        axis_name="pod")(vals))[0]
+    err_ef = np.linalg.norm(acc - true)
+    err_naive = np.linalg.norm(naive - true)
+    assert err_ef < err_naive * 0.5
+
+
+def test_ef_apply_matches_error_feedback_class():
+    rng = np.random.default_rng(2)
+    tree = {"a": jnp.asarray(rng.standard_normal(32), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+    res = jax.tree.map(jnp.zeros_like, tree)
+    ef = compress.ErrorFeedback.init(tree)
+    for _ in range(3):
+        out_fn, res = compress.ef_apply(tree, res)
+        out_cls, ef = ef.apply(tree)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), out_fn, out_cls)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), res, ef.residual)
+
+
 # ---------------------------------------------------------------------------
 # Elastic
 # ---------------------------------------------------------------------------
@@ -224,6 +282,34 @@ def test_plan_downsize():
     assert plan.new_shape["model"] == 16          # TP degree preserved
     assert plan.new_shape["data"] == 8            # pow2 below 11.2
     assert plan.dropped_rows == 8
+
+
+def test_plan_downsize_counts_devices_as_integers():
+    """Fractions that leave exactly a power of two must keep it: the
+    old float path computed ``80 * (1 - 0.9) = 7.999…`` and halved the
+    mesh to 4 although exactly 8 devices survive."""
+    plan = elastic.plan_downsize({"data": 80}, dead_fraction=0.9)
+    assert plan.new_shape["data"] == 8
+    assert plan.dropped_rows == 72
+    # 14 * 3/7 dead = 6 → 8 survive exactly (another fp-noise boundary)
+    plan = elastic.plan_downsize({"data": 14, "model": 4},
+                                 dead_fraction=3 / 7)
+    assert plan.new_shape["data"] == 8
+    assert plan.new_shape["model"] == 4
+
+
+def test_plan_downsize_boundaries():
+    # nothing dead → identity
+    plan = elastic.plan_downsize({"data": 8}, dead_fraction=0.0)
+    assert plan.new_shape["data"] == 8 and plan.dropped_rows == 0
+    # everything dead → error, as does a nonsense fraction
+    with pytest.raises(ValueError):
+        elastic.plan_downsize({"data": 8}, dead_fraction=1.0)
+    with pytest.raises(ValueError):
+        elastic.plan_downsize({"data": 8}, dead_fraction=1.5)
+    # one survivor is a legal (degenerate) mesh
+    plan = elastic.plan_downsize({"data": 8}, dead_fraction=7 / 8)
+    assert plan.new_shape["data"] == 1
 
 
 def test_remesh_requires_enough_devices():

@@ -720,3 +720,91 @@ def test_serve_engine_pipeline_packs_without_runs():
     sched = eng.pipeline.cache.get_or_pack([g], eng.pipeline.pads_for([g]),
                                            with_runs=False)
     assert sched.sort_perm is None
+
+
+# ---------------------------------------------------------------------------
+# ShardedPipeline (data-parallel stacking, per-replica caches)
+# ---------------------------------------------------------------------------
+
+def test_sharded_pipeline_pack_step_stacks_replicas():
+    from repro.pipeline import ShardedPipeline
+
+    rng = np.random.default_rng(0)
+    graphs = [random_binary_tree(int(rng.integers(2, 10)), rng)
+              for _ in range(32)]
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM))
+              .astype(np.float32) for g in graphs]
+    labels = np.arange(32)
+    sp = ShardedPipeline(INPUT_DIM, 4)
+    comp = sp.composer(8)
+    steps, _ = comp.compose_sharded(graphs, inputs, {"label": labels},
+                                    num_shards=4)
+    b = sp.pack_step(steps[0])
+    k = len(steps[0].replicas[0].graphs)
+    pads = steps[0].pads
+    assert b["ext"].shape == (4, pads.nodes * k + 1, INPUT_DIM)
+    assert b["weights"].shape == (4, k)
+    assert b["sample_ids"].shape == (4, k)
+    assert b["label"].shape == (4, k)
+    for leaf in jax.tree.leaves(b["dev"]):
+        assert leaf.shape[0] == 4
+    # stacked leaves equal each replica's solo pack (same pads)
+    solo = SchedulePipeline(INPUT_DIM)
+    for r, rep in enumerate(steps[0].replicas):
+        pb = solo.pack(rep.graphs, rep.inputs, pads=pads)
+        jax.tree.map(lambda s, d: np.testing.assert_array_equal(
+            np.asarray(s), np.asarray(d[r])), pb.dev, b["dev"])
+        np.testing.assert_array_equal(np.asarray(pb.ext),
+                                      np.asarray(b["ext"][r]))
+
+
+def test_sharded_pipeline_epoch2_hit_rate_matches_unsharded():
+    """Acceptance criterion (d): in epoch 2 every replica's measured
+    cache hit rate equals the unsharded composer's — the stable
+    per-replica fingerprint streams land every lookup in that replica's
+    warm cache."""
+    from repro.pipeline import ShardedPipeline
+
+    rng = np.random.default_rng(5)
+    graphs = [random_binary_tree(int(rng.integers(2, 12)), rng)
+              for _ in range(64)]
+    inputs = [rng.standard_normal((g.num_nodes, INPUT_DIM))
+              .astype(np.float32) for g in graphs]
+
+    # unsharded reference: composed epochs through one pipeline
+    up = SchedulePipeline(INPUT_DIM)
+    ucomp = up.composer(16)
+    for _ in range(2):
+        snap = dict(up.cache.stats())
+        for cb in ucomp.compose(graphs, inputs)[0]:
+            up.pack(*cb.as_item())
+    u = up.cache.stats()
+    u_lookups = (u["hits"] - snap["hits"]) + (u["misses"] - snap["misses"])
+    u_rate = (u["hits"] - snap["hits"]) / u_lookups
+    assert u_rate == 1.0                        # epoch 2 fully warm
+
+    sp = ShardedPipeline(INPUT_DIM, 4)
+    scomp = sp.composer(16)
+    for _ in range(2):
+        snaps = [dict(p.cache.stats()) for p in sp.pipes]
+        for st in scomp.compose_sharded(graphs, inputs, num_shards=4)[0]:
+            sp.pack_step(st)
+    for r, p in enumerate(sp.pipes):
+        s = p.cache.stats()
+        d_hits = s["hits"] - snaps[r]["hits"]
+        d_miss = s["misses"] - snaps[r]["misses"]
+        assert d_hits + d_miss > 0
+        assert d_hits / (d_hits + d_miss) == u_rate, (r, d_hits, d_miss)
+
+
+def test_sharded_pipeline_validates():
+    from repro.pipeline import ShardedPipeline, ShardedStep
+
+    with pytest.raises(ValueError, match="num_shards"):
+        ShardedPipeline(INPUT_DIM, 0)
+    sp = ShardedPipeline(INPUT_DIM, 2)
+    comp = sp.composer(8)
+    steps, _ = comp.compose_sharded([chain(2)] * 8, num_shards=2)
+    bad = ShardedStep(replicas=steps[0].replicas[:1], pads=steps[0].pads)
+    with pytest.raises(ValueError, match="replicas"):
+        sp.pack_step(bad)
