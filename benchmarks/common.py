@@ -76,3 +76,80 @@ class Collector:
     def add_time(self, name: str, stats: Dict[str, float], detail: str = ""):
         """Record a timing with its distribution (value = p50 ms)."""
         self.add(name, stats["p50_ms"], "ms", detail, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage breakdown rows (obs.trace + obs.registry)
+# ---------------------------------------------------------------------------
+
+def emit_pipeline_stages(*, n_graphs: int = 12, batch_size: int = 4,
+                         hidden: int = 32, input_dim: int = 32,
+                         max_len: int = 12, seed: int = 0) -> None:
+    """Drive one tiny compose → pack → fused fwd → fused bwd pass
+    through :class:`~repro.pipeline.SchedulePipeline` so every pipeline
+    stage span lands in the active registry's ``span.*`` histograms.
+
+    No-op when no tracer is installed — suites stay zero-overhead when
+    run standalone; ``benchmarks/run.py`` installs a per-suite tracer
+    and calls this once per suite, so every ``BENCH_*.json`` carries
+    the same stage-breakdown rows regardless of which paths the suite
+    itself exercises.  The ``fwd``/``bwd`` spans time execution (the
+    programs are compiled outside the spans, and the spans block on the
+    result via ``maybe_block``)."""
+    from repro.obs import trace
+    if trace.get_tracer() is None:
+        return
+    import jax.numpy as jnp
+
+    from repro.configs.paper import get_paper_model
+    from repro.core.scheduler import execute, readout_roots
+    from repro.pipeline import SchedulePipeline
+
+    m = get_paper_model("var_lstm")
+    fn = m.make_vertex(hidden=hidden, input_dim=input_dim)
+    params = fn.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    graphs = m.make_graphs(n_graphs, max_len=max_len, rng=rng)
+    inputs = [rng.standard_normal((g.num_nodes, input_dim)
+                                  ).astype(np.float32) for g in graphs]
+    pipe = SchedulePipeline(ext_dim=input_dim)
+    batches, _ = pipe.compose(graphs, inputs, batch_size=batch_size)
+    for i, cb in enumerate(batches[:2]):
+        pb = pipe.pack(*cb.as_item())
+        dev, ext = pb.dev, pb.ext
+
+        def _loss(p, e, dev=dev):
+            r = execute(fn, p, dev, e, fusion_mode="megastep")
+            return jnp.sum(readout_roots(r.buf, dev) ** 2)
+
+        fwd = jax.jit(lambda p, e, dev=dev: execute(
+            fn, p, dev, e, fusion_mode="megastep").buf)
+        bwd = jax.jit(jax.grad(_loss))
+        jax.block_until_ready(fwd(params, ext))   # compile outside spans
+        jax.block_until_ready(bwd(params, ext))
+        with trace.correlate(batch=i):
+            with trace.span("fwd", batch=i):
+                trace.maybe_block(fwd(params, ext))
+            with trace.span("bwd", batch=i):
+                trace.maybe_block(bwd(params, ext))
+
+
+def add_stage_rows(col: Collector, registry=None) -> int:
+    """Turn the active registry's ``span.*`` histograms into
+    ``stage/<name>`` records (value = p50 ms, with mean/iters stats) so
+    ``compare.py`` diffs the per-stage breakdown alongside the suite's
+    own rows.  Returns the number of rows added."""
+    from repro.obs.registry import get_registry
+    reg = registry if registry is not None else get_registry()
+    snap = reg.snapshot()
+    added = 0
+    for key in sorted(snap["histograms"]):
+        if not key.startswith("span."):
+            continue
+        s = snap["histograms"][key]
+        col.add_time(f"stage/{key[len('span.'):]}",
+                     {"p50_ms": s["p50"], "mean_ms": s["mean"],
+                      "iters": s["count"]},
+                     detail=f"window={s['window']}")
+        added += 1
+    return added

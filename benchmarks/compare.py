@@ -48,10 +48,23 @@ def main(argv=None) -> int:
                     help="relative p50 regression that triggers a warning")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when regressions are found")
+    ap.add_argument("--require-stages", default=None, metavar="SUBSTR",
+                    help="exit 1 unless fresh suites matching SUBSTR "
+                         "contain at least one stage/<name> breakdown row")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline)
     fresh = _load(args.fresh)
+
+    if args.require_stages is not None:
+        hit = any(args.require_stages in suite and
+                  name.startswith("stage/")
+                  for (suite, name, _detail) in fresh)
+        if not hit:
+            print(f"compare: no stage/ rows in fresh suites matching "
+                  f"{args.require_stages!r} — observability breakdown "
+                  f"missing", file=sys.stderr)
+            return 1
     if not base:
         print(f"compare: no baseline records under {args.baseline!r} — "
               f"nothing to diff")

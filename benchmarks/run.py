@@ -23,6 +23,9 @@ from benchmarks import (bench_ablation, bench_dist, bench_fixed_lstm,
                         bench_graph_construction, bench_memory,
                         bench_roofline, bench_serving, bench_tree_fc,
                         bench_tree_lstm, bench_var_lstm)
+from benchmarks.common import add_stage_rows, emit_pipeline_stages
+from repro.obs import trace
+from repro.obs.registry import fresh_registry
 
 SUITES = [
     ("fixed_lstm (Fig 8a/e)", bench_fixed_lstm),
@@ -72,7 +75,17 @@ def main() -> None:
         print(f"# === {title} ===", flush=True)
         t0 = time.time()
         try:
-            col = mod.main(["--full"] if args.full else [])
+            # Per-suite tracer + registry: any instrumented path the
+            # suite exercises (pipeline, serving, kernels) feeds the
+            # registry's span.* histograms; emit_pipeline_stages then
+            # guarantees the core compose→pack→fwd→bwd stages exist
+            # even for suites that bypass SchedulePipeline, and the
+            # aggregate becomes stage/<name> rows in BENCH_<suite>.json.
+            with fresh_registry() as reg, \
+                    trace.install_tracer(trace.Tracer(registry=reg)):
+                col = mod.main(["--full"] if args.full else [])
+                emit_pipeline_stages()
+                add_stage_rows(col, reg)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# SUITE FAILED: {title}", flush=True)

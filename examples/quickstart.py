@@ -5,6 +5,11 @@ paper's Fig. 4), packs a batch of random parse trees G, and runs one
 batched training step — no per-sample graph construction anywhere.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+With ``REPRO_TRACE=trace.json`` in the environment the same run also
+writes a Chrome/Perfetto timeline (open in ui.perfetto.dev): compose →
+pack → cache-hit → H2D → fwd/bwd → reduce spans, correlated by batch
+and step ids.  Tracing off costs nothing.
 """
 
 import jax
@@ -14,6 +19,7 @@ import numpy as np
 from repro.core.scheduler import execute_lazy, readout_roots
 from repro.core.structure import random_binary_tree
 from repro.models.treelstm import TreeLSTMVertex
+from repro.obs import trace
 from repro.pipeline import SchedulePipeline
 
 # --- 1. declare F once (the static vertex function) ----------------------
@@ -36,15 +42,33 @@ print(f"packed {len(graphs)} trees: {batch.sched.T} levels × "
 
 # --- 4. batched training step: schedule F over G, lazy-batched grads -----
 @jax.jit
-def train_step(p, e, dev):
+def fwd_bwd(p, e, dev):
     def loss(pp):
         buf = execute_lazy(fn, pp, e, dev)        # Alg. 1 + §3.5 lazy
         root_h = readout_roots(buf, dev)[:, 64:]  # [K, hidden]
         return jnp.mean(root_h ** 2)
-    l, g = jax.value_and_grad(loss)(p)
-    return l, jax.tree.map(lambda w, gw: w - 0.1 * gw, p, g)
+    return jax.value_and_grad(loss)(p)
 
-loss, params = train_step(params, batch.ext, batch.dev)
+
+@jax.jit
+def apply_grads(p, g):
+    return jax.tree.map(lambda w, gw: w - 0.1 * gw, p, g)
+
+
+def train_step(p, e, dev, step):
+    # Under REPRO_TRACE each step is a train.step span with nested
+    # fwd/bwd and reduce children; maybe_block brackets the device work
+    # so the spans time execution, not dispatch.  With no tracer the
+    # span sites are a single is-None check each.
+    with trace.correlate(step=step), trace.span("train.step", step=step):
+        with trace.span("train.fwd_bwd"):
+            l, g = fwd_bwd(p, e, dev)
+            trace.maybe_block(g)
+        with trace.span("train.reduce"):
+            p = trace.maybe_block(apply_grads(p, g))
+    return l, p
+
+loss, params = train_step(params, batch.ext, batch.dev, step=0)
 print(f"one batched step OK — loss {float(loss):.5f}")
 print("the SAME compiled program serves any other batch of trees:")
 graphs2 = [random_binary_tree(int(rng.integers(4, 20)), rng)
@@ -52,7 +76,7 @@ graphs2 = [random_binary_tree(int(rng.integers(4, 20)), rng)
 inputs2 = [rng.standard_normal((g.num_nodes, 32)).astype(np.float32) * 0.1
            for g in graphs2]
 batch2 = pipe.pack(graphs2, inputs2)       # same bucket → no re-compile
-loss2, params = train_step(params, batch2.ext, batch2.dev)
+loss2, params = train_step(params, batch2.ext, batch2.dev, step=1)
 print(f"second batch, zero graph-construction overhead — "
       f"loss {float(loss2):.5f}")
 print(f"pipeline stats: {pipe.stats()}")

@@ -1,0 +1,13 @@
+"""repro: a production-scale jax_pallas reproduction of Cavs
+(vertex-centric dynamic neural networks).
+
+Importing the package activates the observability layer when the
+environment asks for it: ``REPRO_TRACE=<path>`` (or ``=1`` for
+``trace.json``) installs the process-global tracer and flushes a
+Chrome/Perfetto trace-event timeline at exit — see
+``docs/observability.md``.  The hook is a single env read when unset.
+"""
+
+from repro.obs.trace import maybe_install_from_env as _obs_boot
+
+_obs_boot()

@@ -36,6 +36,8 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from repro.obs import trace
+
 
 class SimulatedFailure(RuntimeError):
     """Raised by :class:`FaultInjector` / :class:`ChaosHook` to emulate
@@ -211,14 +213,26 @@ def install_chaos(hook: ChaosHook):
 
 def chaos_fire(site: str) -> None:
     """Instrumentation call sites use this: no hook → free; a hook may
-    raise :class:`SimulatedFailure` to inject a fault."""
+    raise :class:`SimulatedFailure` to inject a fault.  An injection
+    that actually fires is also emitted as a ``chaos.fired`` trace
+    instant, so chaos runs show up on the span timeline at the exact
+    point in the pipeline they hit."""
     if _CHAOS is not None:
-        _CHAOS.fire(site)
+        try:
+            _CHAOS.fire(site)
+        except SimulatedFailure:
+            trace.instant("chaos.fired", site=site)
+            raise
 
 
 def chaos_corrupt_ext(ext: np.ndarray, sched) -> np.ndarray:
     """Give the installed hook a chance to poison a packed external
-    matrix (NaN-batch injection); identity when no hook is installed."""
+    matrix (NaN-batch injection); identity when no hook is installed.
+    A batch the hook actually rewrote is marked with a
+    ``chaos.ext_poisoned`` trace instant."""
     if _CHAOS is None:
         return ext
-    return _CHAOS.corrupt_ext(ext, sched)
+    out = _CHAOS.corrupt_ext(ext, sched)
+    if out is not ext:
+        trace.instant("chaos.ext_poisoned", site="ext")
+    return out

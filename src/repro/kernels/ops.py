@@ -28,6 +28,7 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import gather_scatter as gsc
 from repro.kernels import mamba_ssd as ssd
 from repro.kernels import ref
+from repro.obs.registry import get_registry
 
 
 def _default_impl() -> str:
@@ -35,6 +36,15 @@ def _default_impl() -> str:
     if forced:
         return forced
     return "pallas" if jax.default_backend() == "tpu" else "chunked"
+
+
+def _tick(op: str, impl: str) -> None:
+    """Count one dispatch through this layer on the metrics registry
+    (``kernel.dispatch{op=...,impl=...}``).  Dispatchers run at TRACE
+    time inside jit, so this counts program builds per op/backend —
+    which backend actually serves each op, and how often retracing
+    happens — not per-step launches (``obs.profile`` censuses those)."""
+    get_registry().inc("kernel.dispatch", op=op, impl=impl)
 
 
 def _interpret() -> bool:
@@ -48,6 +58,7 @@ def _interpret() -> bool:
 def lstm_gates(gates: jax.Array, c_prev: jax.Array,
                impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     impl = _default_impl() if impl == "auto" else impl
+    _tick("lstm_gates", impl)
     if impl == "pallas":
         return cell_kernels.lstm_gates(gates, c_prev, interpret=_interpret())
     return ref.lstm_gates(gates, c_prev)
@@ -58,6 +69,7 @@ def lstm_level_fused(h_prev, c_prev, ext_proj, wh, b,
     """One fused batching task: h_prev @ W_h + gates + state update
     (kernels/level_step.py — gates never round-trip HBM)."""
     impl = _default_impl() if impl == "auto" else impl
+    _tick("lstm_level_fused", impl)
     if impl == "pallas":
         from repro.kernels import level_step
         return level_step.lstm_level_fused(h_prev, c_prev, ext_proj, wh, b,
@@ -68,6 +80,7 @@ def lstm_level_fused(h_prev, c_prev, ext_proj, wh, b,
 def treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k, child_mask,
                    impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     impl = _default_impl() if impl == "auto" else impl
+    _tick("treelstm_gates", impl)
     if impl == "pallas":
         return cell_kernels.treelstm_gates(i_pre, f_pre, o_pre, u_pre, c_k,
                                            child_mask, interpret=_interpret())
@@ -89,6 +102,7 @@ def level_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
     contiguous-block write, no fusion guarantee).
     """
     impl = _default_impl() if impl == "auto" else impl
+    _tick("level_megastep", impl)
     if impl == "pallas":
         from repro.kernels import level_megastep as lm
         if kind == "lstm":
@@ -138,6 +152,7 @@ def frontier_megastep(kind: str, buf: jax.Array, child_ids: jax.Array,
     — the bit-identity anchor for the continuous engine).
     """
     impl = _default_impl() if impl == "auto" else impl
+    _tick("frontier_megastep", impl)
     if impl == "pallas":
         M = child_ids.shape[0]
         S = buf.shape[1]
@@ -182,6 +197,7 @@ def bwd_megastep(kind: str, g: jax.Array, buf: jax.Array,
     sort; the jnp fallbacks don't need them and ignore them.
     """
     impl = _default_impl() if impl == "auto" else impl
+    _tick("bwd_megastep", impl)
     if impl == "pallas":
         from repro.kernels import level_megastep_bwd as lmb
         return lmb.bwd_megastep(kind, g, buf, child_ids, ext_ids, node_mask,
@@ -213,6 +229,7 @@ def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
     the dst buffer aliased in place; the fallback is XLA's scatter-add.
     """
     impl = _default_impl() if impl == "auto" else impl
+    _tick("scatter_add_rows", impl)
     if impl == "pallas":
         from repro.kernels import level_megastep_bwd as lmb
         return lmb.scatter_add_rows(dst, idx, rows, interpret=_interpret())
@@ -225,6 +242,7 @@ def scatter_add_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
 
 def gather_rows(src: jax.Array, idx: jax.Array, impl: str = "auto") -> jax.Array:
     impl = _default_impl() if impl == "auto" else impl
+    _tick("gather_rows", impl)
     if impl == "pallas":
         return gsc.gather_rows(src, idx, interpret=_interpret())
     return ref.gather_rows(src, idx)
@@ -233,6 +251,7 @@ def gather_rows(src: jax.Array, idx: jax.Array, impl: str = "auto") -> jax.Array
 def scatter_rows(dst: jax.Array, idx: jax.Array, rows: jax.Array,
                  impl: str = "auto") -> jax.Array:
     impl = _default_impl() if impl == "auto" else impl
+    _tick("scatter_rows", impl)
     if impl == "pallas":
         return gsc.scatter_rows(dst, idx, rows, interpret=_interpret())
     return ref.scatter_rows(dst, idx, rows)
@@ -248,6 +267,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               block_q: int = 512, block_k: int = 512) -> jax.Array:
     """``[B, Hq, Sq, D] × [B, Hkv, Sk, D]² → [B, Hq, Sq, D]``."""
     impl = _default_impl() if impl == "auto" else impl
+    _tick("attention", impl)
     if impl == "pallas":
         return fa.flash_attention(q, k, v, causal=causal, window=window,
                                   scale=scale, interpret=_interpret())
@@ -265,6 +285,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      impl: str = "auto") -> jax.Array:
     """``[B, Hq, D] × [B, Hkv, S, D]² → [B, Hq, D]``."""
     impl = _default_impl() if impl == "auto" else impl
+    _tick("decode_attention", impl)
     if impl == "pallas":
         return dec.decode_attention(q, k, v, kv_len=kv_len, window=window,
                                     scale=scale, interpret=_interpret())
@@ -284,6 +305,7 @@ def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
         impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Chunked state-space-dual scan; returns ``(y, final_state)``."""
     impl = _default_impl() if impl == "auto" else impl
+    _tick("ssd", impl)
     if impl == "ref":
         return ref.ssd_reference(x, dt, A, B, C, D,
                                  initial_state=initial_state)

@@ -1,0 +1,240 @@
+"""Chrome/Perfetto trace-event export + text flamegraph.
+
+``write_chrome_trace(tracer, path)`` serializes a tracer's spans to the
+Chrome trace-event JSON object format — open the file in
+``ui.perfetto.dev`` (or ``chrome://tracing``) for the pack/H2D/fwd/bwd
+timeline with correlation ids in each event's ``args``.  The
+``REPRO_TRACE=<path>`` environment flag arranges this automatically at
+process exit (``trace.maybe_install_from_env``).
+
+``flamegraph(events)`` renders the same data as an indented text tree
+(per-name aggregation along nesting paths, total-ms bars) for terminals
+without a browser.
+
+CLI::
+
+    python -m repro.obs.export trace.json --validate --flame
+
+``--validate`` checks the file against the trace-event schema (the CI
+``tier1-obs`` job gates on it); ``--flame`` prints the flamegraph.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, Iterable, List, Optional
+
+__all__ = ["chrome_events", "write_chrome_trace", "validate_chrome_trace",
+           "flamegraph", "flamegraph_from_tracer"]
+
+_PHASES = {"X", "i", "I", "B", "E", "M", "C"}
+
+
+def chrome_events(tracer) -> List[Dict[str, Any]]:
+    """A tracer's spans as Chrome trace-event dicts (``ts``/``dur`` in
+    microseconds, per the format; correlation ids + attrs in ``args``;
+    thread-name metadata events so Perfetto labels the lanes)."""
+    pid = os.getpid()
+    events: List[Dict[str, Any]] = []
+    tids: Dict[int, int] = {}
+
+    def _tid(raw: int) -> int:
+        # Compact the raw thread idents into small stable lane numbers.
+        if raw not in tids:
+            tids[raw] = len(tids)
+        return tids[raw]
+
+    for sp in tracer.snapshot():
+        ev: Dict[str, Any] = {
+            "name": sp.name, "ph": "X" if sp.ph == "X" else "i",
+            "ts": sp.ts / 1e3, "pid": pid, "tid": _tid(sp.tid),
+            "cat": sp.name.split(".", 1)[0],
+        }
+        if sp.ph == "X":
+            ev["dur"] = sp.dur / 1e3
+        else:
+            ev["s"] = "t"                      # thread-scoped instant
+        args: Dict[str, Any] = {}
+        if sp.cid:
+            args.update(sp.cid)
+        if sp.attrs:
+            args.update(sp.attrs)
+        if args:
+            ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+        events.append(ev)
+    for raw, lane in tids.items():
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": lane,
+                       "args": {"name": tracer.thread_names.get(
+                           raw, f"thread-{raw}")}})
+    return events
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return repr(v)
+
+
+def write_chrome_trace(tracer, path: str) -> int:
+    """Write the trace-event JSON object format; returns event count."""
+    events = chrome_events(tracer)
+    doc = {"traceEvents": events,
+           "displayTimeUnit": "ms",
+           "otherData": {"dropped_spans": tracer.dropped,
+                         "open_spans": tracer.open_spans}}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return len(events)
+
+
+def validate_chrome_trace(doc: Any) -> List[str]:
+    """Schema check for the trace-event format: the object form needs a
+    ``traceEvents`` list (the bare array form is also accepted); every
+    event needs a string ``name``, a known ``ph``, numeric ``ts`` and
+    integer ``pid``/``tid``; complete events ("X") need a numeric
+    non-negative ``dur``.  Returns error strings (empty = valid)."""
+    errors: List[str] = []
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            return ["object form must carry a 'traceEvents' list"]
+    elif isinstance(doc, list):
+        events = doc
+    else:
+        return [f"top level must be an object or array, got {type(doc)}"]
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errors.append(f"{where}: missing string 'name'")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: bad phase {ph!r}")
+        if ph != "M":
+            if not isinstance(ev.get("ts"), (int, float)):
+                errors.append(f"{where}: missing numeric 'ts'")
+        for fld in ("pid", "tid"):
+            if not isinstance(ev.get(fld), int):
+                errors.append(f"{where}: missing int {fld!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: 'X' event needs dur >= 0")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errors.append(f"{where}: 'args' must be an object")
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# Text flamegraph
+# ---------------------------------------------------------------------------
+
+class _Node:
+    __slots__ = ("total_ns", "count", "children")
+
+    def __init__(self):
+        self.total_ns = 0
+        self.count = 0
+        self.children: Dict[str, _Node] = {}
+
+
+def _build_tree(events: Iterable[Dict[str, Any]]) -> _Node:
+    """Reconstruct nesting from complete events per thread lane and
+    aggregate durations along name paths."""
+    root = _Node()
+    lanes: Dict[int, List[Dict[str, Any]]] = {}
+    for ev in events:
+        if ev.get("ph") == "X":
+            lanes.setdefault(ev.get("tid", 0), []).append(ev)
+    for sps in lanes.values():
+        sps.sort(key=lambda e: (e["ts"], -(e["ts"] + e.get("dur", 0))))
+        stack: List[tuple] = []          # (end_ts, node)
+        for ev in sps:
+            t0, t1 = ev["ts"], ev["ts"] + ev.get("dur", 0)
+            while stack and t0 >= stack[-1][0]:
+                stack.pop()
+            parent = stack[-1][1] if stack else root
+            node = parent.children.setdefault(ev["name"], _Node())
+            node.total_ns += int(ev.get("dur", 0) * 1e3)
+            node.count += 1
+            stack.append((t1, node))
+    return root
+
+
+def flamegraph(events: Iterable[Dict[str, Any]], width: int = 40) -> str:
+    """Indented text flamegraph over Chrome trace events: every line is
+    ``total_ms  count  bar  name``, children indented under parents,
+    siblings sorted by total time."""
+    root = _build_tree(events)
+    scale = max((c.total_ns for c in root.children.values()), default=1)
+    lines: List[str] = []
+
+    def _render(node: _Node, name: str, depth: int) -> None:
+        ms = node.total_ns / 1e6
+        bar = "█" * max(1, int(width * node.total_ns / scale)) \
+            if node.total_ns else "·"
+        lines.append(f"{ms:10.2f}ms {node.count:6d}x  "
+                     f"{'  ' * depth}{bar[:width]} {name}")
+        for child_name, child in sorted(node.children.items(),
+                                        key=lambda kv: -kv[1].total_ns):
+            _render(child, child_name, depth + 1)
+
+    for name, node in sorted(root.children.items(),
+                             key=lambda kv: -kv[1].total_ns):
+        _render(node, name, 0)
+    return "\n".join(lines) if lines else "(no complete spans)"
+
+
+def flamegraph_from_tracer(tracer, width: int = 40) -> str:
+    return flamegraph(chrome_events(tracer), width=width)
+
+
+# ---------------------------------------------------------------------------
+# CLI: validate / flamegraph a trace file (the CI tier1-obs gate)
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="trace-event JSON file to inspect")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the file; exit 1 on violations")
+    ap.add_argument("--flame", action="store_true",
+                    help="print a text flamegraph of the trace")
+    args = ap.parse_args(argv)
+
+    with open(args.path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    rc = 0
+    if args.validate:
+        errors = validate_chrome_trace(doc)
+        if errors:
+            for e in errors:
+                print(f"INVALID: {e}", file=sys.stderr)
+            rc = 1
+        else:
+            n_spans = sum(1 for e in events if e.get("ph") == "X")
+            print(f"OK: {len(events)} events ({n_spans} complete spans) "
+                  f"conform to the Chrome trace-event schema")
+    if args.flame:
+        print(flamegraph(events))
+    if not args.validate and not args.flame:
+        print(f"{len(events)} events in {args.path} "
+              f"(use --validate / --flame)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
                                   attach_sorted_runs, pack_batch)
 from repro.dist.fault import chaos_fire
+from repro.obs import trace
 from repro.pipeline.fingerprint import batch_fingerprint
 from repro.pipeline.persist import SchedulePersist, persist_dir_default
 
@@ -146,11 +147,13 @@ class ScheduleCache:
                 self._entries.move_to_end(pending)
                 self._upgrade(e, with_runs)
                 if e.dev is None:
-                    e.dev = e.sched.to_device()
+                    with trace.span("h2d.sched"):
+                        e.dev = e.sched.to_device()
                 return e.sched, e.dev
         e, _ = self._lookup(graphs, pads, with_runs)
         if e.dev is None:
-            e.dev = e.sched.to_device()
+            with trace.span("h2d.sched"):
+                e.dev = e.sched.to_device()
         return e.sched, e.dev
 
     def _key(self, graphs: Sequence[InputGraph],
@@ -176,19 +179,27 @@ class ScheduleCache:
             chaos_fire("pack")
             self.misses += 1
             self.packs += 1
-            return _Entry(sched=pack_batch(graphs, *p,
-                                           with_runs=with_runs)), None
-        key = batch_fingerprint(graphs, p)
+            with trace.span("sched.pack_batch", graphs=len(graphs)):
+                return _Entry(sched=pack_batch(graphs, *p,
+                                               with_runs=with_runs)), None
+        with trace.span("sched.fingerprint", graphs=len(graphs)):
+            key = batch_fingerprint(graphs, p)
         e = self._entries.get(key)
         if e is not None:
             self.hits += 1
+            trace.instant("sched.cache_hit", tier="memory")
             self._entries.move_to_end(key)
             self._upgrade(e, with_runs)
             return e, key
         self.misses += 1
-        sched = self.persist.load(key) if self.persist is not None else None
+        if self.persist is not None:
+            with trace.span("sched.persist_load"):
+                sched = self.persist.load(key)
+        else:
+            sched = None
         if sched is not None:
             self.disk_hits += 1
+            trace.instant("sched.cache_hit", tier="disk")
             if with_runs:
                 # A forward-only store entry reloaded by a training-path
                 # lookup: upgrade on load (don't write back — the store
@@ -196,10 +207,12 @@ class ScheduleCache:
                 sched = attach_sorted_runs(sched)
         else:
             chaos_fire("pack")
-            sched = pack_batch(graphs, *p, with_runs=with_runs)
+            with trace.span("sched.pack_batch", graphs=len(graphs)):
+                sched = pack_batch(graphs, *p, with_runs=with_runs)
             self.packs += 1
             if self.persist is not None:
-                self.persist.store(key, sched)
+                with trace.span("sched.persist_store"):
+                    self.persist.store(key, sched)
         e = _Entry(sched=sched)
         self._entries[key] = e
         if len(self._entries) > self.capacity:

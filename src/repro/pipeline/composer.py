@@ -29,8 +29,19 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.structure import InputGraph, tight_dims
+from repro.obs import trace
+from repro.obs.registry import get_registry
 from repro.pipeline.buckets import BucketPolicy, PadDims
 from repro.pipeline.fingerprint import batch_fingerprint, graph_fingerprint
+
+
+def _publish_stats(prefix: str, stats) -> None:
+    """Mirror a composition-stats summary into the global registry as
+    ``<prefix>.<field>`` gauges (scalars only)."""
+    reg = get_registry()
+    for k, v in stats.summary().items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            reg.set_gauge(f"{prefix}.{k}", float(v))
 
 
 @dataclasses.dataclass
@@ -250,14 +261,17 @@ class BatchComposer:
                     f"aux rider {name!r} has {len(vals)} values for "
                     f"{n} graphs")
 
-        plan, num_groups, group_batches = self._plan(graphs)
-        batches = [self._materialize(graphs, inputs, aux, idxs)
-                   for idxs in plan]
-        self._consolidate(batches)
+        with trace.span("compose.plan", corpus=n,
+                        batch_size=self.batch_size):
+            plan, num_groups, group_batches = self._plan(graphs)
+            batches = [self._materialize(graphs, inputs, aux, idxs)
+                       for idxs in plan]
+            self._consolidate(batches)
         stats = _batch_stats(
             [b.graphs for b in batches], [b.pads for b in batches],
             num_groups=num_groups, group_batches=group_batches,
             leftover_batches=len(plan) - group_batches)
+        _publish_stats("compose", stats)
         return batches, stats
 
     def compose_sharded(self, graphs: Sequence[InputGraph],
@@ -313,7 +327,9 @@ class BatchComposer:
                     f"aux rider {name!r} has {len(vals)} values for "
                     f"{n} graphs")
 
-        plan, num_groups, group_batches = self._plan(graphs)
+        with trace.span("compose.plan_sharded", corpus=n,
+                        num_shards=num_shards):
+            plan, num_groups, group_batches = self._plan(graphs)
         steps: List[ShardedStep] = []
         num_fillers = 0
         for idxs in plan:
@@ -366,6 +382,7 @@ class BatchComposer:
             base=base, num_shards=num_shards, num_steps=len(steps),
             num_fillers=num_fillers, replica_nodes=replica_nodes,
             replica_hit_rate=tuple(replica_hit_rate))
+        _publish_stats("compose_sharded", stats)
         return steps, stats
 
     def compose_iter(self, graphs: Sequence[InputGraph],

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 from repro.core.structure import (DeviceSchedule, InputGraph, LevelSchedule,
                                   pack_external)
 from repro.dist.fault import chaos_corrupt_ext
+from repro.obs import trace
+from repro.obs.registry import get_registry
 from repro.pipeline.buckets import BucketPolicy, PadDims, ShapeCensus
 from repro.pipeline.cache import ScheduleCache
 from repro.pipeline.composer import (BatchComposer, CompositionStats,
@@ -89,6 +91,13 @@ class SchedulePipeline:
         #: packed WITHOUT the backward's sorted-run arrays, so the LRU
         #: and persist stores stay ~4x smaller (ROADMAP hygiene item).
         self.with_runs = with_runs
+        #: Monotonic pack sequence number — the ``batch=`` correlation
+        #: id every span under a :meth:`pack` call carries.
+        self.pack_seq = 0
+        # Surface this pipeline's stats() in the unified registry
+        # snapshot (weak-ref provider: a collected pipeline vanishes
+        # from the snapshot, no unregistration needed).
+        get_registry().register_provider("pipeline", self.stats)
 
     # -- one batch --------------------------------------------------------
     def pads_for(self, graphs: Sequence[InputGraph]) -> Optional[PadDims]:
@@ -112,15 +121,22 @@ class SchedulePipeline:
                     f"pads must be a PadDims, None (tight) or 'policy', "
                     f"got {pads!r}")
             pads = self.pads_for(graphs)
-        sched, dev = self.cache.get_or_pack_device(
-            graphs, pads, with_runs=self.with_runs)
-        self.census.record(sched)
-        ext_np = pack_external(inputs, sched, self.ext_dim)
-        # Chaos NaN-batch injection point (identity without a hook):
-        # poisons whole per-sample blocks, so a NaN can only reach the
-        # sample it was injected into.
-        ext_np = chaos_corrupt_ext(ext_np, sched)
-        ext = jnp.asarray(ext_np)
+        seq = self.pack_seq
+        self.pack_seq += 1
+        with trace.correlate(batch=seq), \
+                trace.span("pipeline.pack", graphs=len(graphs)):
+            with trace.span("sched.lookup"):
+                sched, dev = self.cache.get_or_pack_device(
+                    graphs, pads, with_runs=self.with_runs)
+            self.census.record(sched)
+            with trace.span("ext.pack"):
+                ext_np = pack_external(inputs, sched, self.ext_dim)
+            # Chaos NaN-batch injection point (identity without a
+            # hook): poisons whole per-sample blocks, so a NaN can only
+            # reach the sample it was injected into.
+            ext_np = chaos_corrupt_ext(ext_np, sched)
+            with trace.span("h2d.ext"):
+                ext = trace.maybe_block(jnp.asarray(ext_np))
         return PackedBatch(sched=sched, dev=dev, ext=ext,
                            aux=dict(aux or {}))
 
@@ -142,7 +158,9 @@ class SchedulePipeline:
         ``(composed_batches, CompositionStats)``; feed the batches to
         :meth:`pack`/:meth:`prefetch` via ``ComposedBatch.as_item()``
         — ``sample_ids`` rides in ``aux`` for realignment."""
-        return self.composer(batch_size).compose(graphs, inputs, aux)
+        with trace.span("pipeline.compose", corpus=len(graphs),
+                        batch_size=batch_size):
+            return self.composer(batch_size).compose(graphs, inputs, aux)
 
     # -- a stream of batches ---------------------------------------------
     def prefetch(self, source: Iterable[Union[Tuple, "PackedBatch"]],
@@ -204,6 +222,7 @@ class ShardedPipeline:
                                        cache_capacity=cache_capacity,
                                        with_runs=with_runs)
                       for _ in range(num_shards)]
+        get_registry().register_provider("sharded_pipeline", self.stats)
 
     def composer(self, batch_size: int) -> BatchComposer:
         """A :class:`BatchComposer` sharing this pipeline's bucket
@@ -226,12 +245,14 @@ class ShardedPipeline:
             raise ValueError(
                 f"step has {step.num_shards} replicas for a "
                 f"{self.num_shards}-shard pipeline")
-        packed = [self.pipes[r].pack(rep.graphs, rep.inputs,
-                                     pads=step.pads)
-                  for r, rep in enumerate(step.replicas)]
-        dev = jax.tree.map(lambda *xs: jnp.stack(xs),
-                           *[p.dev for p in packed])
-        ext = jnp.stack([p.ext for p in packed])
+        with trace.span("pipeline.pack_step", replicas=step.num_shards):
+            packed = [self.pipes[r].pack(rep.graphs, rep.inputs,
+                                         pads=step.pads)
+                      for r, rep in enumerate(step.replicas)]
+            with trace.span("pipeline.stack"):
+                dev = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[p.dev for p in packed])
+                ext = jnp.stack([p.ext for p in packed])
         batch: Dict[str, Any] = {
             "dev": dev, "ext": ext,
             "weights": jnp.asarray(np.stack(

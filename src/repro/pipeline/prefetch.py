@@ -26,6 +26,7 @@ from typing import Any, Callable, Iterable, Iterator
 
 from repro.data.loader import BackgroundPrefetcher
 from repro.dist.fault import SimulatedFailure, chaos_fire
+from repro.obs import trace
 
 
 class AsyncPacker:
@@ -47,19 +48,27 @@ class AsyncPacker:
     def _produce(self) -> Any:
         item = next(self._source)         # StopIteration ends the stream
         attempt = 0
-        while True:
-            try:
-                chaos_fire("prefetch")
-                out = self._pack_fn(item)
-                break
-            except SimulatedFailure:
-                # Transient by contract: retry the SAME item so the
-                # stream never loses a batch; give up after the budget
-                # (the consumer then sees the failure at this batch).
-                attempt += 1
-                if attempt > self._retries:
-                    raise
-                self.transient_retries += 1
+        # Explicit begin/end (not the context manager): the producer
+        # runs on the prefetch thread, and a retried pack is still ONE
+        # span — `retries` lands on it as an end-time attribute.
+        h = trace.begin("prefetch.pack", seq=self.packed)
+        try:
+            while True:
+                try:
+                    chaos_fire("prefetch")
+                    out = self._pack_fn(item)
+                    break
+                except SimulatedFailure:
+                    # Transient by contract: retry the SAME item so the
+                    # stream never loses a batch; give up after the
+                    # budget (the consumer then sees the failure at
+                    # this batch).
+                    attempt += 1
+                    if attempt > self._retries:
+                        raise
+                    self.transient_retries += 1
+        finally:
+            trace.end(h, retries=attempt)
         self.packed += 1
         return out
 

@@ -69,6 +69,7 @@ from repro.core.structure import InputGraph, LevelSchedule
 from repro.core.vertex import has_eager_projection
 from repro.dist.fault import chaos_corrupt_ext, chaos_fire
 from repro.models.readout import ClassificationHead, TokenReadout
+from repro.obs import trace
 from repro.pipeline import BucketPolicy, ScheduleCache, graph_fingerprint
 from repro.serve.engine import _EngineBase
 from repro.serve.robustness import (ACTIVE, CircuitBreaker,
@@ -318,6 +319,11 @@ class ContinuousBatchEngine(_EngineBase):
         dispatch window over the union frontier or (policy permitting)
         defer to let the frontier fill.  Returns live requests (active +
         queued) after the step."""
+        with trace.span("cb.tick", active=self.num_active,
+                        queued=len(self.queue)):
+            return self._step()
+
+    def _step(self) -> int:
         self.lifecycle.sweep_deadlines()
         self._retire_expired()
         self._admit()
@@ -339,11 +345,15 @@ class ContinuousBatchEngine(_EngineBase):
         self._defer_run = 0
 
         window = 1 if urgent else self.policy.max_window
-        ticks, done = self._plan_window(window)
+        with trace.span("cb.plan"):
+            ticks, done = self._plan_window(window)
         if ticks:
-            args = self._stack_window(ticks)
+            with trace.span("cb.stack", ticks=len(ticks)):
+                args = self._stack_window(ticks)
             try:
-                self._buf = self._run_window(args)
+                with trace.span("cb.window", ticks=len(ticks),
+                                fused=self.fused):
+                    self._buf = trace.maybe_block(self._run_window(args))
             except Exception as e:       # noqa: BLE001 — oracle failed too
                 # Both rungs of the ladder failed: the window is lost
                 # (the buffer was not advanced), so every in-flight
@@ -354,7 +364,8 @@ class ContinuousBatchEngine(_EngineBase):
             self.ticks += len(ticks)
             self.windows += 1
         if done:
-            self._retire(done)
+            with trace.span("cb.retire", count=len(done)):
+                self._retire(done)
         return len(self._active) + len(self.queue)
 
     def run(self, max_steps: int = 100_000) -> List[ContinuousRequest]:
@@ -385,7 +396,9 @@ class ContinuousBatchEngine(_EngineBase):
                 break
             self.queue.pop(0)
             try:
-                self._activate(req, plan)
+                with trace.correlate(request=req.request_id), \
+                        trace.span("cb.admit", rows=plan.num_rows):
+                    self._activate(req, plan)
             except Exception as e:       # noqa: BLE001 — ext/projection
                 self.lifecycle.finish_failed(req, f"admission failed: {e}")
                 continue
@@ -588,18 +601,24 @@ class ContinuousBatchEngine(_EngineBase):
         heads — the lazy ``push`` made immediate.  One whole-buffer
         host readback, indexed in numpy: a per-count device gather
         would recompile for every retirement batch size."""
-        buf_np = np.asarray(self._buf)
+        with trace.span("cb.readback", count=len(done)):
+            buf_np = np.asarray(self._buf)
         roots = buf_np[[a.root_row for a in done]]
         ok: List[ContinuousRequest] = []
         for a, root in zip(done, roots):
             req = a.req
             if self.lifecycle.expired(req):
                 self.lifecycle.finish_timeout(req)
+                status = "timeout"
             elif self.guard_nonfinite and not np.isfinite(root).all():
                 self.lifecycle.finish_failed(req, "non-finite root state")
+                status = "failed"
             else:
                 req.root_state = root.copy()
                 ok.append(req)
+                status = "ok"
+            trace.instant("cb.retired", request=req.request_id,
+                          status=status)
         self._release(done)
         if ok and self._head_logits is not None:
             # Batched readout, padded to a power of two so the jitted

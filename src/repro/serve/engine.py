@@ -69,6 +69,8 @@ from repro.core.structure import InputGraph
 from repro.core.vertex import VertexIO
 from repro.dist.fault import chaos_fire
 from repro.kernels import ops as kops
+from repro.obs import trace
+from repro.obs.registry import get_registry
 from repro.pipeline import (BucketPolicy, SchedulePipeline,
                             graph_fingerprint)
 from repro.serve.kv_cache import CacheSlots
@@ -84,7 +86,9 @@ class _EngineBase:
     """Lifecycle plumbing shared by the three engines: ``queue`` and
     ``finished`` are views onto the :class:`RequestLifecycle` (so the
     bounded-queue/terminal-status invariants cannot be bypassed), and
-    ``health()`` is the lifecycle's counters plus engine extras."""
+    ``health()`` is the lifecycle's counters plus engine extras,
+    schedule-cache tier stats (engines that own a cache or pipeline),
+    and — when tracing is on — a summary of the most recent spans."""
 
     lifecycle: RequestLifecycle
 
@@ -101,7 +105,30 @@ class _EngineBase:
         return self.lifecycle.finished
 
     def health(self) -> Dict[str, Any]:
-        return self.lifecycle.health(**self._health_extra())
+        h = self.lifecycle.health(**self._health_extra())
+        # Cache/persist tier stats: engines route schedules through
+        # either their own ScheduleCache (continuous batching) or a
+        # SchedulePipeline (structure serving) — surface whichever
+        # exists so hits/disk_hits/packs are one health() away.
+        tiers = getattr(self, "cache", None)
+        if tiers is None:       # not `or`: an empty cache is len()==0-falsy
+            tiers = getattr(self, "pipeline", None)
+        stats = getattr(tiers, "stats", None)
+        if callable(stats):
+            h["schedule_cache"] = stats()
+        t = trace.get_tracer()
+        if t is not None:
+            h["recent_spans"] = t.summary(10)
+        return h
+
+    def register_into(self, registry=None, *,
+                      name: str = "engine") -> str:
+        """Register this engine's :meth:`health` as a snapshot provider
+        on ``registry`` (default: the global one); returns the actual
+        provider name (suffixed on collision).  Weak-ref'd: a collected
+        engine drops out of snapshots on its own."""
+        reg = registry if registry is not None else get_registry()
+        return reg.register_provider(name, self.health)
 
     def _health_extra(self) -> Dict[str, Any]:
         return {}
@@ -176,8 +203,10 @@ class ServeEngine(_EngineBase):
         # dispatch = race).  positions_device() copies likewise.
         tokens = jnp.asarray(self._last_token.copy())[:, None]
         positions = self.slots.positions_device()
-        logits, new_cache = self._decode(self.params, self.slots.cache,
-                                         tokens, positions)
+        with trace.span("serve.decode", active=int(self.slots.num_active)):
+            logits, new_cache = self._decode(self.params, self.slots.cache,
+                                             tokens, positions)
+            trace.maybe_block(logits)
         self.slots.cache = new_cache
         next_tok = self._sample(logits)
         self.slots.advance()
@@ -232,43 +261,49 @@ class ServeEngine(_EngineBase):
             slot = free.pop(0)
             req = self.queue.pop(0)
             req.status = ACTIVE
-            # Bucket the prompt length to a power of two: one compiled
-            # prefill program per bucket, not per length (the
-            # recompilation cost Cavs exists to avoid).  The pad is on
-            # the *right*; we prefill only the first ``plen - 1`` real
-            # tokens' effects by admitting with ``prompt_len = plen - 1``
-            # and replaying the last prompt token through the decode
-            # step — its fresh K/V overwrites the first pad row, and
-            # ``kv_len`` masking hides the rest, so attention is exact.
-            plen = len(req.prompt)
-            prompt = np.asarray(req.prompt, np.int32)
-            bucket = max(8, 1 << (plen - 1).bit_length()) \
-                if self.pad_prompts else plen
-            padded = np.concatenate(
-                [prompt, np.zeros(bucket - plen, np.int32)])
-            logits, cache1 = self._prefill(self.params,
-                                           jnp.asarray(padded)[None, :])
-            if bucket == plen:
-                # Exact prompt (pad_prompts=False, required for SSM
-                # state exactness): the prefilled cache/state already
-                # includes the last token; take the first output token
-                # from the prefill logits directly.
-                self.slots.admit(slot, req.request_id, cache1,
-                                 prompt_len=plen)
-                tok = int(np.asarray(self._sample(logits[None]
-                                                  if logits.ndim == 1
-                                                  else logits))[0])
-                req.output.append(tok)
-                self._last_token[slot] = tok
-            else:
-                # Padded prompt: prefill's last position is a pad, so
-                # admit at plen-1 and REPLAY the final prompt token
-                # through the decode step — its fresh K/V overwrites the
-                # first pad row and kv_len masking hides the rest.
-                self.slots.admit(slot, req.request_id, cache1,
-                                 prompt_len=plen - 1)
-                self._last_token[slot] = int(prompt[-1])
-            self._live_requests[req.request_id] = req
+            with trace.correlate(request=req.request_id), \
+                    trace.span("serve.prefill", slot=slot,
+                               prompt_len=len(req.prompt)):
+                self._admit_one(slot, req)
+
+    def _admit_one(self, slot: int, req: Request) -> None:
+        # Bucket the prompt length to a power of two: one compiled
+        # prefill program per bucket, not per length (the
+        # recompilation cost Cavs exists to avoid).  The pad is on
+        # the *right*; we prefill only the first ``plen - 1`` real
+        # tokens' effects by admitting with ``prompt_len = plen - 1``
+        # and replaying the last prompt token through the decode
+        # step — its fresh K/V overwrites the first pad row, and
+        # ``kv_len`` masking hides the rest, so attention is exact.
+        plen = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        bucket = max(8, 1 << (plen - 1).bit_length()) \
+            if self.pad_prompts else plen
+        padded = np.concatenate(
+            [prompt, np.zeros(bucket - plen, np.int32)])
+        logits, cache1 = self._prefill(self.params,
+                                       jnp.asarray(padded)[None, :])
+        if bucket == plen:
+            # Exact prompt (pad_prompts=False, required for SSM
+            # state exactness): the prefilled cache/state already
+            # includes the last token; take the first output token
+            # from the prefill logits directly.
+            self.slots.admit(slot, req.request_id, cache1,
+                             prompt_len=plen)
+            tok = int(np.asarray(self._sample(logits[None]
+                                              if logits.ndim == 1
+                                              else logits))[0])
+            req.output.append(tok)
+            self._last_token[slot] = tok
+        else:
+            # Padded prompt: prefill's last position is a pad, so
+            # admit at plen-1 and REPLAY the final prompt token
+            # through the decode step — its fresh K/V overwrites the
+            # first pad row and kv_len masking hides the rest.
+            self.slots.admit(slot, req.request_id, cache1,
+                             prompt_len=plen - 1)
+            self._last_token[slot] = int(prompt[-1])
+        self._live_requests[req.request_id] = req
 
     def _req_by_id(self, rid: int) -> Request:
         return self._live_requests[rid]
@@ -416,7 +451,9 @@ class VertexServeEngine(_EngineBase):
                 jnp.asarray(child_mask), jnp.asarray(ext_rows),
                 jnp.asarray(node_mask), jnp.int32(out_base))
         try:
-            self._buf = self._run_tick(args)
+            with trace.span("serve.tick", active=self.num_active,
+                            fused=self.fused):
+                self._buf = trace.maybe_block(self._run_tick(args))
         except Exception as e:           # noqa: BLE001 — oracle failed too
             # Both rungs of the ladder failed: the whole tick is lost
             # (the buffer was not advanced), so every in-flight request
@@ -587,8 +624,9 @@ class StructureServeEngine(_EngineBase):
         self.lifecycle.sweep_deadlines()
         if not self.queue:
             return 0
-        reqs = (self._compose_flush() if self.compose
-                else self.queue[: self.batch_size])
+        with trace.span("serve.flush"):
+            reqs = (self._compose_flush() if self.compose
+                    else self.queue[: self.batch_size])
         taken = set(id(r) for r in reqs)   # by identity: requests hold
         self.queue = [r for r in self.queue  # ndarrays, so == is unusable
                       if id(r) not in taken]
@@ -608,7 +646,8 @@ class StructureServeEngine(_EngineBase):
             self.lifecycle.finish_failed(
                 req, f"batch execution failed: {exc}")
 
-        pairs = quarantine_bisect(list(reqs), run_fn, on_fail)
+        with trace.span("serve.batch", size=len(reqs)):
+            pairs = quarantine_bisect(list(reqs), run_fn, on_fail)
         if poisoned[0]:
             self.lifecycle.quarantines += 1
         self.batches += 1
@@ -655,7 +694,8 @@ class StructureServeEngine(_EngineBase):
         batch = self.pipeline.pack([r.graph for r in reqs],
                                    [np.asarray(r.inputs, np.float32)
                                     for r in reqs])
-        roots = np.asarray(self._score(batch.dev, batch.ext))
+        with trace.span("serve.score", size=len(reqs), fused=self.fused):
+            roots = np.asarray(self._score(batch.dev, batch.ext))
         return [roots[k] for k in range(len(reqs))]
 
     def _score(self, dev, ext) -> jax.Array:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import types
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
@@ -39,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.dist import sharding as shd
 from repro.models.layers import axis_rules
+from repro.obs import trace
 from repro.optim import (OptState, adamw_init, adamw_update, microbatch_grads,
                          warmup_cosine)
 from repro.train.metrics import MetricLogger
@@ -488,67 +490,94 @@ class Trainer:
         with ctx:
             if self._train_step is None:
                 first = next(batches)
-                self._train_step = self._build_step(first)
+                with trace.span("train.build_step"):
+                    self._train_step = self._build_step(first)
                 batches = _chain_first(first, batches)
 
             done = start
             skips_in_row = 0
             while done < steps:
-                batch = next(batches)
-                batch = {k: jax.tree.map(jnp.asarray, v)
-                         for k, v in batch.items()}
-                try:
-                    if fault_injector is not None:
-                        fault_injector.tick(done)
-                    state, metrics = self._train_step(state, batch)
-                except _FAULTS as e:
-                    if self.ckpt is None:
-                        raise
-                    # Node failure: restore last commit and continue.
-                    self.ckpt.wait()
-                    if self.ckpt.latest_step() is None:
-                        # Crashed before the FIRST commit: there is
-                        # nothing to restore, so re-init from the
-                        # recorded init rng — restoring into the zeroed
-                        # twin here used to resume from all-zero params
-                        # (a silently different model).
-                        rng = (self._init_rng if self._init_rng is not None
-                               else jax.random.PRNGKey(0))
-                        state, done = self.init_state(rng), 0
-                        continue
-                    # state was donated — rebuild an abstract twin to
-                    # restore into.
-                    abstract = jax.eval_shape(
-                        lambda: TrainState(
-                            params=self.init_params_fn(jax.random.PRNGKey(0)),
-                            opt=adamw_init(self.init_params_fn(
-                                jax.random.PRNGKey(0)))))
-                    zeros = jax.tree.map(
-                        lambda s: jnp.zeros(s.shape, s.dtype), abstract)
-                    state, done = self.maybe_restore(zeros)
-                    continue
-                if cfg.skip_nonfinite:
-                    if float(np.asarray(metrics.get("skipped", 0.0))) > 0:
-                        skips_in_row += 1
-                        logger.count("nonfinite_skips")
-                        if skips_in_row > cfg.max_skip_steps:
-                            raise RuntimeError(
-                                f"aborting at step {done}: "
-                                f"{skips_in_row} consecutive non-finite "
-                                f"steps (max_skip_steps="
-                                f"{cfg.max_skip_steps}) — the model has "
-                                f"diverged, skipping batches cannot "
-                                f"save it")
-                    else:
-                        skips_in_row = 0
-                done += 1
-                if done % cfg.log_every == 0 or done == steps:
-                    logger.log(done, metrics)
-                if self.ckpt is not None and self.ckpt.should_save(done):
-                    self.ckpt.save(_ckpt_view(state), done)
+                with trace.correlate(step=done), \
+                        trace.span("train.step", step=done):
+                    state, done, skips_in_row = self._fit_one(
+                        state, batches, done, steps, skips_in_row,
+                        logger, fault_injector)
             if self.ckpt is not None:
                 self.ckpt.save(_ckpt_view(state), done, blocking=True)
         return state, logger
+
+    def _fit_one(self, state, batches, done, steps, skips_in_row,
+                 logger, fault_injector):
+        """One iteration of the fit loop (factored out so the whole
+        body sits under one ``train.step`` span with ``step=done``
+        correlation).  Returns ``(state, done, skips_in_row)``; a fault
+        recovery leaves ``done`` rewound instead of advanced."""
+        cfg = self.cfg
+        batch = next(batches)
+        with trace.span("train.h2d"):
+            batch = {k: jax.tree.map(jnp.asarray, v)
+                     for k, v in batch.items()}
+        t0 = time.perf_counter()
+        try:
+            if fault_injector is not None:
+                fault_injector.tick(done)
+            with trace.span("train.fwd_bwd"):
+                state, metrics = self._train_step(state, batch)
+                trace.maybe_block(metrics)
+        except _FAULTS as e:
+            if self.ckpt is None:
+                raise
+            # Node failure: restore last commit and continue.
+            trace.instant("train.fault", step=done, error=repr(e))
+            with trace.span("train.restore"):
+                self.ckpt.wait()
+                if self.ckpt.latest_step() is None:
+                    # Crashed before the FIRST commit: there is
+                    # nothing to restore, so re-init from the
+                    # recorded init rng — restoring into the zeroed
+                    # twin here used to resume from all-zero params
+                    # (a silently different model).
+                    rng = (self._init_rng if self._init_rng is not None
+                           else jax.random.PRNGKey(0))
+                    return self.init_state(rng), 0, skips_in_row
+                # state was donated — rebuild an abstract twin to
+                # restore into.
+                abstract = jax.eval_shape(
+                    lambda: TrainState(
+                        params=self.init_params_fn(jax.random.PRNGKey(0)),
+                        opt=adamw_init(self.init_params_fn(
+                            jax.random.PRNGKey(0)))))
+                zeros = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), abstract)
+                state, done = self.maybe_restore(zeros)
+            return state, done, skips_in_row
+        if cfg.skip_nonfinite:
+            # NOTE this read syncs on the step's metrics, so the
+            # train_tick below measures executed train work (not just
+            # dispatch) whenever the guard is on — and always does
+            # under tracing, via the maybe_block above.
+            if float(np.asarray(metrics.get("skipped", 0.0))) > 0:
+                skips_in_row += 1
+                logger.count("nonfinite_skips")
+                if skips_in_row > cfg.max_skip_steps:
+                    raise RuntimeError(
+                        f"aborting at step {done}: "
+                        f"{skips_in_row} consecutive non-finite "
+                        f"steps (max_skip_steps="
+                        f"{cfg.max_skip_steps}) — the model has "
+                        f"diverged, skipping batches cannot "
+                        f"save it")
+            else:
+                skips_in_row = 0
+        logger.train_tick(time.perf_counter() - t0)
+        done += 1
+        if done % cfg.log_every == 0 or done == steps:
+            with trace.span("train.log"):
+                logger.log(done, metrics)
+        if self.ckpt is not None and self.ckpt.should_save(done):
+            with trace.span("train.checkpoint", step=done):
+                self.ckpt.save(_ckpt_view(state), done)
+        return state, done, skips_in_row
 
 
 class _nullctx:

@@ -371,25 +371,9 @@ def test_scatter_add_rows_property(seed, r, n, block_r):
 # Structural launch census: 1 pallas launch per level, fwd AND bwd
 # ---------------------------------------------------------------------------
 
-def _walk_jaxpr(jx, scans, outside):
-    """Collect (pallas_call count inside each scan body) and the count
-    outside any scan, recursing through nested jaxprs."""
-    for eqn in jx.eqns:
-        if eqn.primitive.name == "pallas_call":
-            outside[0] += 1
-        if eqn.primitive.name == "scan":
-            body = eqn.params["jaxpr"].jaxpr
-            inner_scans, inner = [], [0]
-            _walk_jaxpr(body, inner_scans, inner)
-            scans.append(inner[0])
-            scans.extend(inner_scans)
-            continue
-        for v in eqn.params.values():
-            sub = getattr(v, "jaxpr", None)
-            if sub is not None and hasattr(sub, "eqns"):
-                _walk_jaxpr(sub, scans, outside)
-            elif hasattr(v, "eqns"):
-                _walk_jaxpr(v, scans, outside)
+# Promoted to a runtime surface in PR 9; the tests pin the same walker
+# the profiler ships.
+from repro.obs.profile import walk_jaxpr as _walk_jaxpr  # noqa: E402
 
 
 @pytest.mark.parametrize("kind", ["lstm", "treelstm"])
