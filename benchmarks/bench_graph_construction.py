@@ -17,6 +17,14 @@ stream of random minibatches.  ``--assert-cache`` additionally enforces
 the CI cache-effectiveness gate: a second epoch over the same synthetic
 corpus must hit ≥90%.
 
+The ``splice/*`` rows measure the per-graph tier (PR 10): packs/sec of
+SPLICING unseen batch combinations out of harvested solo schedules vs
+cold-packing them, on a Zipf-weighted corpus where every batch
+fingerprint is new but every member graph has been seen — plus the
+per-graph warm-restart leg.  ``--assert-splice`` enforces the CI gate
+(≥3x forward-path speedup, all combos spliced with zero packs,
+byte-identity on a sample, warm restart packs nothing).
+
 The ``composer/*`` rows measure pipeline-aware batch FORMATION (PR 5)
 on a skewed synthetic corpus (a few hot topologies + a long tail,
 shuffled arrival order — the real-corpus shape): measured cache hit
@@ -174,6 +182,114 @@ def bench_pipeline(col: Collector, *, n_topologies: int = 24, bs: int = 16,
             f"with_runs=False entry bytes / full ({n_topologies} batches)")
 
 
+def bench_splice(col: Collector, *, n_topologies: int = 24, bs: int = 16,
+                 n_combos: int = 16, assert_splice: bool = False):
+    """``splice/*`` rows (PR 10): packs/sec of the per-graph tier's
+    SPLICE path vs a cold ``pack_batch`` on a Zipf-weighted corpus of
+    UNSEEN batch combinations — every batch fingerprint is new, but
+    every member graph was seen (harvested) earlier — plus the
+    per-graph warm-restart leg (a fresh cache splicing straight from
+    per-graph disk entries).  ``--assert-splice`` enforces the CI gate:
+    forward-path splice ≥3x cold pack, every combo spliced (zero
+    ``pack_batch`` executions), a sampled combo byte-identical to the
+    monolithic pack, and a warm restart that packs nothing."""
+    rng = np.random.default_rng(0)
+    topos = [random_binary_tree(int(rng.integers(32, 128)), rng)
+             for _ in range(n_topologies)]
+    zipf = 1.0 / np.arange(1, n_topologies + 1) ** 1.2
+    zipf /= zipf.sum()
+    combos, seen = [], set()
+    while len(combos) < n_combos:
+        idx = tuple(int(i) for i in rng.choice(n_topologies, bs, p=zipf))
+        if idx in seen:
+            continue
+        seen.add(idx)
+        combos.append([topos[i] for i in idx])
+
+    def sweep(make_cache, with_runs, repeats=5):
+        ts, last = [], None
+        for _ in range(repeats):
+            cache = make_cache()
+            t0 = time.perf_counter()
+            for c in combos:
+                cache.get_or_pack(c, with_runs=with_runs)
+            ts.append((time.perf_counter() - t0) / len(combos))
+            last = cache
+        return float(np.median(ts)), last
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as pdir:
+        def seeded():
+            """A cache whose GRAPH tier holds every topology (one K=1
+            cold pack each) but whose BATCH tier has seen none of the
+            combos — the post-first-epoch steady state.  Memory-only:
+            the disk tier gets its own warm-restart leg below."""
+            cache = ScheduleCache(enabled=True, persist=False)
+            for g in topos:
+                cache.get_or_pack([g], with_runs=False)
+            cache.reset_stats()
+            return cache
+
+        t_cold_f, _ = sweep(lambda: ScheduleCache(enabled=False), False)
+        t_cold_r, _ = sweep(lambda: ScheduleCache(enabled=False), True)
+        t_spl_f, warm_f = sweep(seeded, False)
+        t_spl_r, _ = sweep(seeded, True)
+
+        col.add("splice/cold_packs_per_s", 1.0 / t_cold_f, "packs/s",
+                f"bs={bs} forward-only pack_batch from scratch")
+        col.add("splice/splice_packs_per_s", 1.0 / t_spl_f, "packs/s",
+                f"bs={bs} unseen combos assembled from the graph tier")
+        fwd_x = t_cold_f / t_spl_f
+        col.add("splice/speedup_forward", fwd_x, "x",
+                f"with_runs=False (serving path) — gate: >=3x "
+                f"(got {fwd_x:.1f}x)")
+        col.add("splice/speedup_training", t_cold_r / t_spl_r, "x",
+                "with_runs=True (the sorted-run argsort is paid by "
+                "both legs)")
+        s = warm_f.stats()
+        col.add("splice/combo_splices", s["splices"], "splices",
+                f"{n_combos} unseen combos, packs={s['packs']}")
+
+        # --- per-graph warm restart: a FRESH process, same store ------
+        seed_disk = ScheduleCache(enabled=True, persist=pdir)
+        for g in topos:
+            seed_disk.get_or_pack([g], with_runs=False)  # harvest → disk
+        restart = ScheduleCache(enabled=True, persist=pdir)
+        for c in combos[: max(4, n_combos // 4)]:
+            restart.get_or_pack(c, with_runs=False)
+        r = restart.stats()
+        col.add("splice/warm_restart_splices", r["splices"], "splices",
+                f"fresh cache, per-graph disk entries — packs="
+                f"{r['packs']} graph_packs={r['graph_packs']} "
+                f"graph_disk_hits={r['graph_disk_hits']}")
+
+        if assert_splice:
+            if fwd_x < 3.0:
+                raise AssertionError(
+                    f"splice gate: forward splice speedup {fwd_x:.2f}x "
+                    f"< 3x over cold pack")
+            if s["splices"] != n_combos or s["packs"] != 0:
+                raise AssertionError(
+                    f"splice gate: expected {n_combos} splices and zero "
+                    f"packs, got splices={s['splices']} packs={s['packs']}")
+            if r["splices"] < 1 or r["packs"] != 0 or r["graph_packs"] != 0:
+                raise AssertionError(
+                    f"splice gate: warm restart must splice from disk "
+                    f"without packing, got {r}")
+            from repro.pipeline import splice_schedules
+            sample = combos[0]
+            solos = [pack_batch([g], with_runs=False) for g in sample]
+            got = splice_schedules(sample, solos)
+            want = pack_batch(sample)
+            for f in ("child_ids", "child_mask", "ext_ids", "node_mask",
+                      "slot_of", "node_valid", "root_slots", "num_nodes",
+                      "sort_perm", "sorted_child_ids", "run_head"):
+                if not np.array_equal(getattr(got, f), getattr(want, f)):
+                    raise AssertionError(
+                        f"splice gate: field {f} differs from the "
+                        f"monolithic pack")
+
+
 def _skewed_corpus(n_samples: int, seed: int = 0):
     """A corpus with real-traffic skew: a few HOT topologies carry most
     of the mass, a long tail of rare shapes carries the rest, and
@@ -285,6 +401,11 @@ def main(argv=None):
     ap.add_argument("--assert-compose", action="store_true",
                     help="fail unless composed batching beats FIFO on "
                          "hit rate and occupancy (compile count no worse)")
+    ap.add_argument("--assert-splice", action="store_true",
+                    help="fail unless the per-graph tier splices every "
+                         "unseen combination >=3x faster than a cold "
+                         "pack, byte-identically, and warm-restarts "
+                         "without packing")
     ap.add_argument("--persist-dir", default=None,
                     help="route the composed leg through an on-disk "
                          "schedule store at this directory")
@@ -302,6 +423,9 @@ def main(argv=None):
     bench_pipeline(col, **({"n_topologies": 48, "bs": 32} if args.full
                            else {}),
                    assert_cache=args.assert_cache)
+    bench_splice(col, **({"n_topologies": 48, "bs": 32, "n_combos": 32}
+                         if args.full else {}),
+                 assert_splice=args.assert_splice)
     bench_composer(col, **({"n_samples": 512, "bs": 32} if args.full
                            else {}),
                    assert_compose=args.assert_compose,

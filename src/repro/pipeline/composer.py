@@ -132,10 +132,13 @@ class CompositionStats:
 
     ``hit_rate`` is the *predicted* schedule-cache hit rate of the
     composed epoch against an empty cache (1 − distinct batch
-    fingerprints / batches); ``mean_occupancy`` is the mean fraction of
-    padded ``T×M`` slots holding real vertices; ``compiled_shapes`` is
-    the number of distinct padded shape tuples (= XLA programs) the
-    epoch induces."""
+    fingerprints / batches); ``splice_rate`` is the predicted fraction
+    of batches the cache's per-graph tier serves by SPLICING — batch
+    fingerprint unseen, but every member graph seen earlier in the
+    epoch (a cold pack harvests its members, so order matters);
+    ``mean_occupancy`` is the mean fraction of padded ``T×M`` slots
+    holding real vertices; ``compiled_shapes`` is the number of
+    distinct padded shape tuples (= XLA programs) the epoch induces."""
 
     num_samples: int
     num_batches: int
@@ -145,6 +148,7 @@ class CompositionStats:
     num_groups: int                        # distinct topologies seen
     group_batches: int                     # whole same-fingerprint batches
     leftover_batches: int                  # mixed remainder batches
+    splice_rate: float = 0.0               # predicted graph-tier splices
 
     def summary(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -157,13 +161,20 @@ def _batch_stats(graph_batches: Sequence[Sequence[InputGraph]],
     """Composition accounting for any batch plan (composed or FIFO —
     the bench uses this to score both sides with the same ruler)."""
     fps = set()
+    seen_graphs = set()                    # graph fps harvested so far
     shapes = set()
     occ = []
     n = 0
+    splice_batches = 0
     for graphs, pads in zip(graph_batches, pads_list):
         if pads is None:
             pads = PadDims(*tight_dims(graphs))
-        fps.add(batch_fingerprint(graphs, pads))
+        fp = batch_fingerprint(graphs, pads)
+        gfps = [graph_fingerprint(g) for g in graphs]
+        if fp not in fps and all(g in seen_graphs for g in gfps):
+            splice_batches += 1            # batch miss, all members seen
+        fps.add(fp)
+        seen_graphs.update(gfps)
         shapes.add(pads)
         total_nodes = sum(g.num_nodes for g in graphs)
         occ.append(total_nodes / max(1, pads.levels * pads.width))
@@ -175,7 +186,8 @@ def _batch_stats(graph_batches: Sequence[Sequence[InputGraph]],
         mean_occupancy=float(np.mean(occ)) if occ else 0.0,
         compiled_shapes=len(shapes),
         num_groups=num_groups, group_batches=group_batches,
-        leftover_batches=leftover_batches)
+        leftover_batches=leftover_batches,
+        splice_rate=splice_batches / nb if nb else 0.0)
 
 
 def fifo_stats(graphs: Sequence[InputGraph], batch_size: int,

@@ -54,7 +54,6 @@ optimization — never an accuracy trade.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import time
@@ -70,7 +69,7 @@ from repro.core.vertex import has_eager_projection
 from repro.dist.fault import chaos_corrupt_ext, chaos_fire
 from repro.models.readout import ClassificationHead, TokenReadout
 from repro.obs import trace
-from repro.pipeline import BucketPolicy, ScheduleCache, graph_fingerprint
+from repro.pipeline import BucketPolicy, ScheduleCache
 from repro.serve.engine import _EngineBase
 from repro.serve.robustness import (ACTIVE, CircuitBreaker,
                                     RequestLifecycle, validate_structure)
@@ -227,8 +226,7 @@ class ContinuousBatchEngine(_EngineBase):
                  clock: Callable[[], float] = time.monotonic,
                  breaker_threshold: int = 3,
                  guard_nonfinite: bool = True,
-                 cache: Optional[ScheduleCache] = None,
-                 plan_capacity: int = 256):
+                 cache: Optional[ScheduleCache] = None):
         if num_rows < 1 or frontier_width < 1:
             raise ValueError("num_rows and frontier_width must be >= 1")
         self.fn = fn
@@ -248,15 +246,15 @@ class ContinuousBatchEngine(_EngineBase):
         self.guard_nonfinite = guard_nonfinite
         self.lifecycle = RequestLifecycle(max_queue=max_queue, clock=clock)
         self._breaker = CircuitBreaker(breaker_threshold)
-        # Per-request schedule reuse (the pipeline satellite): solo
-        # schedules come from a ScheduleCache keyed by topology
-        # fingerprint — a recurring topology admits with ZERO packing
-        # work — and the derived frontier plans are memoized beside it.
+        # Per-request schedule reuse: solo schedules come from the
+        # ScheduleCache's per-GRAPH tier — a recurring topology admits
+        # with ZERO packing work, and one seen ANYWHERE (any cold batch
+        # pack harvests its members; any persist store survives
+        # restarts) admits without a solo pack.  The derived frontier
+        # plan is memoized in the graph-tier entry's ``extras``, so
+        # plan lifetime tracks schedule lifetime (no private LRU).
         self.cache = cache if cache is not None else ScheduleCache()
         self._buckets = BucketPolicy(mode="pow2")
-        self._plans: "collections.OrderedDict[Tuple, _Plan]" = \
-            collections.OrderedDict()
-        self._plan_capacity = plan_capacity
         self.plan_hits = 0
         self.plan_misses = 0
         # Arena: rows [0, num_rows) are allocatable; row num_rows is the
@@ -407,18 +405,15 @@ class ContinuousBatchEngine(_EngineBase):
 
     def _plan_for(self, graph: InputGraph) -> _Plan:
         pads = self._buckets.bucket([graph])._replace(arity=self.A)
-        key = (graph_fingerprint(graph), tuple(pads))
-        plan = self._plans.get(key)
+        sched, extras = self.cache.get_or_pack_graph(
+            graph, tuple(pads), with_runs=False, with_extras=True)
+        plan = extras.get("frontier_plan")
         if plan is not None:
-            self._plans.move_to_end(key)
             self.plan_hits += 1
             return plan
         self.plan_misses += 1
-        sched = self.cache.get_or_pack([graph], pads, with_runs=False)
         plan = _plan_from_schedule(sched)
-        self._plans[key] = plan
-        while len(self._plans) > self._plan_capacity:
-            self._plans.popitem(last=False)
+        extras["frontier_plan"] = plan
         return plan
 
     def _activate(self, req: ContinuousRequest, plan: _Plan) -> None:

@@ -36,7 +36,8 @@ from repro.dist.fault import (ScriptedChaos, SimulatedFailure, chaos_fire,
                               get_chaos, install_chaos)
 from repro.models.rnn import LSTMVertex
 from repro.models.treelstm import TreeLSTMVertex
-from repro.pipeline import BucketPolicy, ScheduleCache, SchedulePipeline
+from repro.pipeline import (BucketPolicy, ScheduleCache, SchedulePipeline,
+                            batch_fingerprint)
 from repro.pipeline.persist import SchedulePersist
 from repro.serve import (CircuitBreaker, StructureRequest,
                          StructureServeEngine, TERMINAL, VertexRequest,
@@ -375,21 +376,32 @@ def test_persist_chaos_absorbed_as_miss_and_store_error(tmp_path):
     graphs, _ = _batch_stream(2, 1)[0]
     store = SchedulePersist(str(tmp_path))
 
-    # store fault: swallowed (warn-once), counted, entry never lands
-    cache = ScheduleCache(capacity=8, persist=store)
+    # store fault: swallowed (warn-once), counted, the BATCH entry never
+    # lands.  Each store call is its own chaos site, so the token hits
+    # the batch write and the harvested per-graph solos still land.
+    cache = ScheduleCache(capacity=8, persist=store, splice=True)
     with install_chaos(ScriptedChaos(fail={"persist_store": [0]})):
         with pytest.warns(RuntimeWarning, match="cold packs"):
             sched, _ = cache.get_or_pack_device(graphs, None)
-    assert store.store_errors == 1 and store.stores == 0
+    assert store.store_errors == 1
+    assert store.stores == cache.stats()["harvests"]
+    assert store.load(batch_fingerprint(graphs)) is None
     assert sched is not None
 
+    # The remaining phases exercise the BATCH disk tier in isolation —
+    # splice pinned off, else the graph tier (seeded by the harvest
+    # above) would serve every miss and the load-fault path under test
+    # would never run.
+
     # fault-free repack from a fresh cache lands the entry on disk
-    ScheduleCache(capacity=8, persist=store).get_or_pack_device(graphs, None)
-    assert store.stores == 1
+    n = store.stores
+    ScheduleCache(capacity=8, persist=store,
+                  splice=False).get_or_pack_device(graphs, None)
+    assert store.stores == n + 1
 
     # load fault on that real entry: counted miss, served by a cold pack
     misses_before = store.load_misses
-    cold = ScheduleCache(capacity=8, persist=store)
+    cold = ScheduleCache(capacity=8, persist=store, splice=False)
     with install_chaos(ScriptedChaos(fail={"persist_load": [0]})):
         cold.get_or_pack_device(graphs, None)
     assert store.load_misses == misses_before + 1
@@ -397,7 +409,7 @@ def test_persist_chaos_absorbed_as_miss_and_store_error(tmp_path):
 
     # without chaos the same entry is really readable (it was the
     # injection, not the store, that missed)
-    fine = ScheduleCache(capacity=8, persist=store)
+    fine = ScheduleCache(capacity=8, persist=store, splice=False)
     fine.get_or_pack_device(graphs, None)
     assert fine.disk_hits == 1 and fine.packs == 0
 

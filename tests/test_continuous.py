@@ -14,6 +14,7 @@ from repro.core.structure import InputGraph, chain, random_dag
 from repro.models.readout import ClassificationHead, TokenReadout
 from repro.models.rnn import LSTMVertex
 from repro.models.treelstm import TreeLSTMVertex
+from repro.pipeline import ScheduleCache
 from repro.serve import (AdmissionPolicy, ContinuousBatchEngine,
                          ContinuousRequest, StructureRequest,
                          StructureServeEngine, TERMINAL)
@@ -306,11 +307,17 @@ def test_token_generation_deterministic_across_interleavings():
 
 
 def test_plan_and_schedule_reuse_on_admission():
-    """Recurring topologies admit through the plan/schedule caches —
-    the pipeline satellite: admission does zero packing work on a hit."""
+    """Recurring topologies admit through the cache's per-GRAPH tier —
+    the pipeline satellite: admission does zero packing work on a hit,
+    and the frontier plan memoized in the tier entry's extras rides
+    along (plan lifetime == schedule lifetime, no private LRU).  The
+    cache is pinned ON so the contract holds under the
+    REPRO_SCHED_CACHE=0 CI leg too (where the ablation legitimately
+    re-packs and re-plans every admission)."""
     fn, params = _LSTM, _LSTM_PARAMS
     rng = np.random.default_rng(3)
-    eng = ContinuousBatchEngine(fn, params, num_rows=64, frontier_width=4)
+    eng = ContinuousBatchEngine(fn, params, num_rows=64, frontier_width=4,
+                                cache=ScheduleCache(enabled=True))
     for i in range(8):
         g = chain(5)                      # same topology every time
         assert eng.submit(ContinuousRequest(i, g, _mk_inputs(rng, g, 4)))
@@ -319,4 +326,22 @@ def test_plan_and_schedule_reuse_on_admission():
     assert h["plan_hits"] >= 7            # first admission is the miss
     assert h["plan_misses"] == 1
     stats = eng.cache.stats()
-    assert stats["hits"] >= 0             # shared cache is live
+    assert stats["graph_hits"] >= 7       # served by the graph tier
+    assert stats["graph_packs"] == 1      # one solo pack, ever
+
+
+def test_disabled_cache_admission_replans_every_request():
+    """The REPRO_SCHED_CACHE=0 ablation really is uncached at
+    admission: every submit re-packs and re-plans (one solo
+    ``pack_batch`` each — never two), and serving still works."""
+    fn, params = _LSTM, _LSTM_PARAMS
+    rng = np.random.default_rng(4)
+    eng = ContinuousBatchEngine(fn, params, num_rows=64, frontier_width=4,
+                                cache=ScheduleCache(enabled=False))
+    for i in range(3):
+        g = chain(4)
+        assert eng.submit(ContinuousRequest(i, g, _mk_inputs(rng, g, 4)))
+        eng.run()
+    h = eng.health()
+    assert h["plan_misses"] == 3 and h["plan_hits"] == 0
+    assert eng.cache.stats()["graph_packs"] == 3

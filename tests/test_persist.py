@@ -164,20 +164,27 @@ def test_version_mismatch_is_a_quiet_miss(tmp_path):
 
 def test_cache_recovers_from_poisoned_store(tmp_path):
     """A corrupt entry must cost exactly one re-pack: the cache treats
-    it as a miss, packs cold, and REPLACES the bad file."""
+    it as a miss, packs cold, and REPLACES the bad files (the batch
+    entry AND the harvested per-graph entry)."""
     graphs = [chain(5)]
-    c1 = ScheduleCache(enabled=True, persist=tmp_path)
+    c1 = ScheduleCache(enabled=True, persist=tmp_path, splice=True)
     c1.get_or_pack(graphs)
-    [path] = list(tmp_path.glob("*.sched"))
-    path.write_bytes(path.read_bytes()[:20])           # poison
-    c2 = ScheduleCache(enabled=True, persist=tmp_path)  # restart
+    paths = list(tmp_path.glob("*.sched"))
+    assert len(paths) == 2                 # batch entry + harvested solo
+    for path in paths:
+        path.write_bytes(path.read_bytes()[:20])       # poison both
+    c2 = ScheduleCache(enabled=True, persist=tmp_path,
+                       splice=True)                    # restart
     s = c2.get_or_pack(graphs)
     assert c2.packs == 1 and c2.disk_hits == 0
-    assert c2.persist.corrupt == 1
+    # batch load + splice-probe graph load both saw the poison
+    assert c2.persist.corrupt == 2
     np.testing.assert_array_equal(s.child_ids, pack_batch(graphs).child_ids)
-    c3 = ScheduleCache(enabled=True, persist=tmp_path)  # healed on disk
+    c3 = ScheduleCache(enabled=True, persist=tmp_path,
+                       splice=True)                    # healed on disk
     c3.get_or_pack(graphs)
     assert c3.disk_hits == 1 and c3.packs == 0
+    assert c3.persist.corrupt == 0
 
 
 def test_store_write_failure_is_swallowed(tmp_path, monkeypatch):
@@ -206,15 +213,17 @@ def test_warm_restart_executes_zero_packs(tmp_path, monkeypatch):
     calls, proven by stats AND by making ``pack_batch`` explode."""
     corpora = [_forest(s) for s in range(4)]
     cold = SchedulePipeline(INPUT_DIM, bucket_policy=BucketPolicy(),
-                            cache=ScheduleCache(enabled=True,
+                            cache=ScheduleCache(enabled=True, splice=True,
                                                 persist=tmp_path))
     for graphs, inputs in corpora:
         cold.pack(graphs, inputs)
     assert cold.stats()["packs"] == len(corpora)
-    assert cold.stats()["disk_stores"] == len(corpora)
+    # each cold pack stores its batch entry AND its harvested solos
+    assert cold.stats()["disk_stores"] == \
+        len(corpora) + cold.stats()["harvests"]
 
     warm = SchedulePipeline(INPUT_DIM, bucket_policy=BucketPolicy(),
-                            cache=ScheduleCache(enabled=True,
+                            cache=ScheduleCache(enabled=True, splice=True,
                                                 persist=tmp_path))
 
     def boom(*a, **k):
@@ -253,9 +262,10 @@ def test_unusable_env_store_degrades_to_no_disk_tier(tmp_path, monkeypatch):
 
 
 def test_reset_stats_resets_disk_tier(tmp_path):
-    c = ScheduleCache(enabled=True, persist=tmp_path)
+    c = ScheduleCache(enabled=True, persist=tmp_path, splice=True)
     c.get_or_pack([chain(4)])
-    assert c.persist.stores == 1 and c.packs == 1
+    # one batch entry + one harvested per-graph entry
+    assert c.persist.stores == 2 and c.packs == 1
     c.reset_stats()
     s = c.stats()
     assert s["packs"] == 0 and s["disk_stores"] == 0
@@ -283,14 +293,21 @@ def test_persist_env_gate(tmp_path, monkeypatch):
 
 def test_persist_keys_distinguish_pads(tmp_path):
     graphs = [chain(3), chain(5)]
-    c = ScheduleCache(enabled=True, persist=tmp_path)
+    c = ScheduleCache(enabled=True, persist=tmp_path, splice=True)
     tight = c.get_or_pack(graphs)
     padded = c.get_or_pack(graphs, (8, 8, 1, 8))
-    assert len(list(c.persist.root.glob("*.sched"))) == 2
-    warm = ScheduleCache(enabled=True, persist=tmp_path)
+    # distinct pads are distinct batch keys: the padded lookup is a
+    # batch MISS — served by splicing the solos the tight cold pack
+    # harvested (spliced results are not written back to the store;
+    # the per-graph entries already cover them)
+    assert c.packs == 1 and c.splices == 1
+    # 1 cold-packed batch entry + 2 harvested per-graph solos
+    assert len(list(c.persist.root.glob("*.sched"))) == 3
+    warm = ScheduleCache(enabled=True, persist=tmp_path, splice=True)
     t2 = warm.get_or_pack(graphs)
     p2 = warm.get_or_pack(graphs, (8, 8, 1, 8))
-    assert warm.disk_hits == 2 and warm.packs == 0
+    assert warm.disk_hits == 1 and warm.packs == 0
+    assert warm.splices == 1 and warm.graph_disk_hits == 2
     assert (t2.T, t2.M) == (tight.T, tight.M)
     assert (p2.T, p2.M) == (padded.T, padded.M) == (8, 8)
 

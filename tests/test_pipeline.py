@@ -171,6 +171,96 @@ def test_cache_env_gate_disables(monkeypatch):
     assert ScheduleCache().enabled
 
 
+def _counting_pack(monkeypatch):
+    """Instrument cache_mod.pack_batch with a call counter."""
+    import repro.pipeline.cache as cache_mod
+    calls = []
+    real = pack_batch
+
+    def counted(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(cache_mod, "pack_batch", counted)
+    return calls
+
+
+def test_cache_disabled_pair_executes_one_pack(monkeypatch):
+    """Regression: with the cache DISABLED, a ``get_or_pack`` →
+    ``get_or_pack_device`` pair used to run ``pack_batch`` TWICE and
+    count two misses/packs (the disabled leg returned ``key=None``, so
+    the pending-attach dedupe never engaged) — the ablation CI leg did
+    2x pack work per step.  One logical lookup = one pack = one miss,
+    enabled or not."""
+    calls = _counting_pack(monkeypatch)
+    graphs, _ = _forest(7)
+    cache = ScheduleCache(enabled=False, persist=False)
+    s = cache.get_or_pack(graphs)
+    s2, d = cache.get_or_pack_device(graphs)
+    assert s is s2 and d is not None
+    assert len(calls) == 1
+    assert cache.misses == 1 and cache.packs == 1
+    # each LATER pair is its own (cold) logical lookup
+    cache.get_or_pack(graphs)
+    cache.get_or_pack_device(graphs)
+    assert len(calls) == 2
+    assert cache.misses == 2 and cache.packs == 2
+    # a non-paired device lookup still cold-packs exactly once
+    cache.get_or_pack_device(graphs)
+    assert len(calls) == 3 and cache.packs == 3
+
+
+def test_cache_pending_attach_survives_eviction(monkeypatch):
+    """Regression: capacity-pressure eviction between ``get_or_pack``
+    and its ``get_or_pack_device`` attach used to turn one logical
+    lookup into two counted lookups (the pending key's ENTRY had been
+    popped).  The pending tuple pins the entry itself, so the attach
+    completes without recounting or re-packing — and re-pins the entry
+    into the LRU."""
+    calls = _counting_pack(monkeypatch)
+    graphs, _ = _forest(8)
+    cache = ScheduleCache(capacity=1, enabled=True, persist=False)
+    s = cache.get_or_pack(graphs)
+    # Concurrent-eviction stand-in: capacity pressure pops the entry
+    # while the pair is in flight (e.g. a prefetch thread's lookups).
+    cache._entries.clear()
+    s2, d = cache.get_or_pack_device(graphs)
+    assert s is s2 and d is not None
+    assert len(calls) == 1                         # never re-packed
+    assert cache.hits == 0 and cache.misses == 1
+    assert len(cache) == 1                         # re-pinned
+    # black-box capacity-1 flow: interleaved pairs stay one-lookup-each
+    other, _ = _forest(9)
+    cache.get_or_pack(other)                       # evicts `graphs`
+    cache.get_or_pack_device(other)                # attach, no recount
+    assert cache.misses == 2 and cache.hits == 0
+    assert len(calls) == 2
+
+
+def test_fingerprint_freezes_topology_mutation_raises():
+    """Regression: the memoized digest went stale silently if a graph's
+    ``children``/``ext_row`` were mutated after first fingerprint —
+    with the graph tier that would splice a WRONG schedule under the
+    stale key.  Fingerprinting freezes the topology: in-place mutation
+    and rebinding both raise instead of corrupting."""
+    g = chain(4)
+    g.children[1].append(2)              # pre-fingerprint mutation is fine
+    g.children[1].pop()
+    fp = graph_fingerprint(g)
+    # frozen: children/ext_row are tuples now — no in-place mutation
+    with pytest.raises(AttributeError):
+        g.children[1].append(2)
+    with pytest.raises(TypeError):
+        g.ext_row[0] = 5
+    # rebinding is caught at the next fingerprint, loudly
+    g.ext_row = [3, 2, 1, 0]
+    with pytest.raises(ValueError, match="frozen once fingerprinted"):
+        graph_fingerprint(g)
+    # an untouched graph keeps returning the memoized digest
+    h = chain(4)
+    assert graph_fingerprint(h) == fp == graph_fingerprint(h)
+
+
 # ---------------------------------------------------------------------------
 # Buckets
 # ---------------------------------------------------------------------------
